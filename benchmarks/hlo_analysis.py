@@ -1,0 +1,357 @@
+"""Loop-aware HLO cost extraction for the roofline analysis.
+
+``compiled.cost_analysis()`` visits a ``while`` body ONCE, so scanned-layer
+models would be undercounted by ~n_layers x (verified in
+tests/test_hlo_analysis.py).  This module parses the post-optimization HLO
+text (per-device shapes, SPMD-partitioned) and accumulates, per
+computation and weighted by loop trip counts:
+
+* ``dot_flops``   -- 2 * prod(result dims) * prod(contracting dims) per
+  ``dot``; elementwise flops are excluded (transformer cost is >=95% dots;
+  the MODEL_FLOPS/HLO_FLOPs ratio is cleaner on dots only).
+* ``bytes``       -- sum over top-level instructions of result + operand
+  bytes (post-opt top-level ops are fusions/dots/copies/collectives, so
+  this is precisely the HBM traffic the fusion boundary implies).
+* ``collective_bytes`` -- per collective family, *wire bytes per chip*
+  using ring estimates on the (per-device) result shape:
+      all-gather       r * (n-1)/n ~ r
+      all-reduce       2r * (n-1)/n ~ 2r
+      reduce-scatter   r * (n-1)   ~ input bytes
+      all-to-all       r
+      collective-permute r
+
+Trip counts come from the largest integer constant in the while's
+condition computation (jax scans compare the induction variable against
+the literal trip count).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"((?:[a-z0-9\-])+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "while", "conditional",
+    "call", "iota",
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, []
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    rest: str                     # full text after "= "
+    opcode: str = ""
+    operands: list = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: dict = field(default_factory=dict)
+
+
+def parse_hlo(text: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur = None
+    for line in text.splitlines():
+        if line and not line.startswith(" "):
+            m = re.match(r"(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\{", line)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if line.lstrip().startswith("ENTRY") or "ENTRY" in line:
+                    comps["__entry__"] = cur
+            elif line.startswith("}"):
+                cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.groups()
+        # opcode = first word followed by '(' after the result type
+        after_type = rest
+        om = _OPCODE_RE.search(after_type)
+        opcode = om.group(1) if om else ""
+        # operands: %names inside the first balanced paren group
+        pstart = after_type.find("(")
+        pend = after_type.find(")", pstart)
+        operands = (_OPERAND_RE.findall(after_type[pstart:pend + 1])
+                    if pstart >= 0 else [])
+        ins = Instr(name=name, rest=rest, opcode=opcode, operands=operands)
+        cur.instrs[name] = ins
+    return comps
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for ins in cond.instrs.values():
+        if ins.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    _, out_dims = _shape_dims(ins.rest)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    if not m or not ins.operands:
+        return 0.0
+    cdims = [int(d) for d in m.group(1).split(",") if d]
+    lhs = comp.instrs.get(ins.operands[0])
+    if lhs is None:
+        return 0.0
+    _, lhs_dims = _shape_dims(lhs.rest)
+    k = 1
+    for d in cdims:
+        if d < len(lhs_dims):
+            k *= lhs_dims[d]
+    out = 1
+    for d in out_dims:
+        out *= d
+    return 2.0 * out * k
+
+
+def _result_bytes(ins: Instr) -> int:
+    head = ins.rest.split(" ")[0]
+    return _shape_bytes(head if "[" in head else ins.rest)
+
+
+def _operand_bytes(comp: Computation, ins: Instr) -> int:
+    total = 0
+    for op in ins.operands:
+        src = comp.instrs.get(op)
+        if src is not None:
+            total += _result_bytes(src)
+    return total
+
+
+def _traffic_bytes(comp: Computation, ins: Instr, comps: dict) -> int:
+    """HBM traffic estimate for one top-level instruction.
+
+    Slice-aware: ``dynamic-slice``/``gather`` read only the slice (a scan
+    body slicing stacked (n_layers, ...) weights must NOT be charged the
+    whole stack per iteration); ``dynamic-update-slice``/``scatter`` are
+    read-modify-writes of the update region only.  Fusions whose
+    parameters feed *only* slicing ops inside are charged those params at
+    the sliced size.
+    """
+    op = ins.opcode
+    if op in ("dynamic-slice", "gather"):
+        return 2 * _result_bytes(ins)             # read slice + write out
+    if op in ("dynamic-update-slice", "scatter"):
+        upd = (comp.instrs.get(ins.operands[1])
+               if len(ins.operands) > 1 else None)
+        return 3 * _result_bytes(upd) if upd is not None \
+            else _result_bytes(ins)
+    if op == "fusion":
+        m = re.search(r"calls=%([\w.\-]+)", ins.rest)
+        body = comps.get(m.group(1)) if m else None
+        total = _result_bytes(ins)
+        if body is None:
+            return total + _operand_bytes(comp, ins)
+        # param index -> set of opcodes consuming it inside the fusion
+        params = {}
+        for bins in body.instrs.values():
+            if bins.opcode == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", bins.rest)
+                if pm:
+                    params[bins.name] = int(pm.group(1))
+        # value origin: walk unary chains (convert/bitcast/copy/reshape/
+        # transpose) back to a parameter so in-place DUS targets and slice
+        # reads are detected through layout/dtype hops
+        _UNARY = {"convert", "bitcast", "copy", "reshape", "transpose",
+                  "broadcast"}
+
+        def origin(name, depth=0):
+            ins2 = body.instrs.get(name)
+            if ins2 is None or depth > 8:
+                return None
+            if ins2.opcode == "parameter":
+                return params.get(name)
+            if ins2.opcode in _UNARY and ins2.operands:
+                return origin(ins2.operands[0], depth + 1)
+            return None
+
+        consumers: dict[int, set] = {}
+        slice_out: dict[int, int] = {}
+        dus_target: set = set()
+        for bins in body.instrs.values():
+            for pos, opd in enumerate(bins.operands):
+                idx = params.get(opd)
+                if idx is None and bins.opcode in (
+                        "dynamic-slice", "gather", "dynamic-update-slice"):
+                    idx = origin(opd)
+                if idx is None:
+                    continue
+                consumers.setdefault(idx, set()).add(bins.opcode)
+                if bins.opcode in ("dynamic-slice", "gather"):
+                    slice_out[idx] = slice_out.get(idx, 0) + \
+                        _result_bytes(bins)
+                if bins.opcode == "dynamic-update-slice" and pos == 0:
+                    dus_target.add(idx)
+        if dus_target:
+            # in-place scatter fusion: the (aliased) full-buffer result is
+            # NOT traffic -- charge read+write of the update slices instead
+            upd_bytes = sum(
+                _result_bytes(body.instrs[bins.operands[1]])
+                for bins in body.instrs.values()
+                if bins.opcode == "dynamic-update-slice"
+                and len(bins.operands) > 1
+                and bins.operands[1] in body.instrs)
+            total = 2 * upd_bytes
+        for i, opd in enumerate(ins.operands):
+            src = comp.instrs.get(opd)
+            if src is None:
+                continue
+            full = _result_bytes(src)
+            used = consumers.get(i, set())
+            if i in dus_target:
+                continue       # in-place updated buffer: aliased, ~free read
+            if used and used <= {"dynamic-slice", "gather"}:
+                total += min(slice_out.get(i, full), full)
+            else:
+                total += full
+        return total
+    return _result_bytes(ins) + _operand_bytes(comp, ins)
+
+
+def analyze(text: str) -> dict:
+    """-> dict(dot_flops, bytes, collective_bytes, collectives={op: bytes},
+    n_collective_ops, while_trips={name: trip}).  All values are
+    PER-DEVICE (post-SPMD shapes), loop-trip weighted."""
+    comps = parse_hlo(text)
+    memo: dict[str, dict] = {}
+    ops_memo: dict[str, list] = {}
+    trips_seen = {}
+
+    def comp_cost(cname: str, stack=()) -> dict:
+        if cname in memo:
+            return memo[cname]
+        if cname in stack:           # recursion guard
+            return defaultdict(float)
+        comp = comps.get(cname)
+        if comp is None:
+            return defaultdict(float)
+        acc = defaultdict(float)
+        coll = defaultdict(float)
+        ops: list = []
+        for ins in comp.instrs.values():
+            rtype = ins.rest[:ins.rest.find(" ")] if " " in ins.rest else ins.rest
+            rbytes = _shape_bytes(ins.rest[:ins.rest.find(")")]
+                                  if ins.opcode == "" else rtype)
+            if ins.opcode == "dot":
+                fl = _dot_flops(comp, ins)
+                acc["dot_flops"] += fl
+                # classify by operand dtype (MXU pipe): int8 runs at 2x bf16
+                lhs = comp.instrs.get(ins.operands[0]) if ins.operands else None
+                ldt = _shape_dims(lhs.rest)[0] if lhs else None
+                if ldt in ("s8", "u8", "s4", "u4", "s16", "s32", "u32"):
+                    acc["dot_flops_int"] += fl
+                elif ldt == "f32":
+                    acc["dot_flops_f32"] += fl
+                else:
+                    acc["dot_flops_bf16"] += fl
+            if ins.opcode == "while":
+                m = re.search(r"condition=%([\w.\-]+)", ins.rest)
+                b = re.search(r"body=%([\w.\-]+)", ins.rest)
+                trip = _trip_count(comps, m.group(1)) if m else 1
+                trips_seen[ins.name] = trip
+                if b:
+                    sub = comp_cost(b.group(1), stack + (cname,))
+                    for k, v in sub.items():
+                        if k.startswith("coll:"):
+                            coll[k[5:]] += v * trip
+                        acc[k] += v * trip
+                    ops.extend(
+                        dict(o, bytes=o["bytes"] * trip,
+                             flops=o["flops"] * trip,
+                             name=f"{ins.name}[x{trip}]/{o['name']}")
+                        for o in ops_memo.get(b.group(1), []))
+                continue
+            if ins.opcode in ("call", "conditional"):
+                for cm in re.findall(r"(?:to_apply|calls)=%([\w.\-]+)",
+                                     ins.rest):
+                    sub = comp_cost(cm, stack + (cname,))
+                    for k, v in sub.items():
+                        if k.startswith("coll:"):
+                            coll[k[5:]] += v
+                        acc[k] += v
+                continue
+            if ins.opcode in _FREE_OPS or not ins.opcode:
+                continue
+            tb = _traffic_bytes(comp, ins, comps)
+            acc["bytes"] += tb
+            ops.append(dict(name=ins.name, opcode=ins.opcode, bytes=tb,
+                            flops=_dot_flops(comp, ins)
+                            if ins.opcode == "dot" else 0.0))
+            for c in _COLLECTIVES:
+                if ins.opcode == c:
+                    factor = {"all-gather": 1.0, "all-reduce": 2.0,
+                              "reduce-scatter": 1.0, "all-to-all": 1.0,
+                              "collective-permute": 1.0}[c]
+                    if c == "reduce-scatter":
+                        wire = _operand_bytes(comp, ins)
+                    else:
+                        wire = rbytes * factor
+                    acc["coll:" + c] += wire
+                    acc["collective_bytes"] += wire
+                    acc["n_collective_ops"] += 1
+        memo[cname] = acc
+        ops.sort(key=lambda o: -o["bytes"])
+        ops_memo[cname] = ops[:24]
+        return acc
+
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {"dot_flops": 0, "bytes": 0, "collective_bytes": 0}
+    total = comp_cost(entry.name)
+    out = dict(total)
+    out["collectives"] = {k[5:]: v for k, v in total.items()
+                          if k.startswith("coll:")}
+    for k in list(out):
+        if k.startswith("coll:"):
+            del out[k]
+    out["while_trips"] = trips_seen
+    out["top_ops"] = ops_memo.get(entry.name, [])[:16]
+    return out

@@ -1,0 +1,136 @@
+"""Roofline analysis over the dry-run JSONs (task spec deliverable g).
+
+Per (arch x shape) on the single-pod mesh, derives the three terms:
+
+    compute    = dot_flops_bf16/197T + dot_flops_int/394T + dot_flops_f32/49T
+    memory     = HLO bytes / 819 GB/s
+    collective = per-chip collective wire bytes / 50 GB/s/link
+
+All inputs are PER-CHIP (the dry-run HLO is SPMD-partitioned, loop-trip
+weighted -- benchmarks/hlo_analysis.py).  Also reports MODEL_FLOPS
+(6*N*D train / 2*N_active*D inference, per chip), the useful-compute
+ratio MODEL_FLOPS/HLO_dot_FLOPs, the dominant bottleneck, and a one-line
+"what would move it" note.
+
+Usage:  PYTHONPATH=src:. python -m benchmarks.roofline [--dir DIR] [--mesh pod256]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_BF16 = 197e12
+PEAK_INT8 = 394e12
+PEAK_F32 = 197e12 / 4
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def load_cells(directory: str, mesh: str = "pod256"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(directory, f"*__{mesh}.json"))):
+        cells.append(json.load(open(path)))
+    return cells
+
+
+def terms(rec: dict) -> dict:
+    h = rec["hlo"]
+    chips = rec["n_chips"]
+    t_c = (h.get("dot_flops_bf16", 0) / PEAK_BF16
+           + h.get("dot_flops_int", 0) / PEAK_INT8
+           + h.get("dot_flops_f32", 0) / PEAK_F32)
+    if t_c == 0 and h.get("dot_flops", 0):
+        # JSONs from before the dtype split: attribute by mode
+        t_c = h["dot_flops"] / (PEAK_BF16 if rec["mode"] == "train"
+                                else PEAK_INT8)
+    t_m = h["bytes"] / HBM_BW
+    t_x = h["collective_bytes"] / LINK_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])
+    # MoE: only routed top-k experts execute -- use active params
+    n = rec["active_params"]
+    tokens = rec["batch"] * (rec["seq"] if rec["mode"] in ("train", "prefill")
+                             else 1)
+    mult = 6 if rec["mode"] == "train" else 2
+    model_flops = mult * n * tokens / chips           # per chip
+    ratio = model_flops / max(h["dot_flops"], 1.0)
+    t_model = model_flops / (PEAK_INT8 if rec["mode"] != "train"
+                             else PEAK_BF16)
+    frac = t_model / max(dom[1], 1e-12)
+    return dict(t_compute=t_c, t_memory=t_m, t_collective=t_x,
+                dominant=dom[0], t_dominant=dom[1],
+                model_flops=model_flops, useful_ratio=ratio,
+                roofline_frac=frac)
+
+
+def suggestion(rec: dict, t: dict) -> str:
+    if t["dominant"] == "collective":
+        top = max(rec["hlo"].get("collectives", {"?": 0}).items(),
+                  key=lambda kv: kv[1])
+        return (f"cut {top[0]} volume ({top[1]/2**20:.0f} MiB/chip): "
+                f"resharding or comm/compute overlap")
+    if t["dominant"] == "memory":
+        if rec["mode"] != "train":
+            return ("decode is weight/KV-HBM-bound: lower W-bits "
+                    "(packed planes) or shard KV wider")
+        return "reduce remat traffic / recompute-vs-store balance"
+    if t["useful_ratio"] < 0.5:
+        return (f"only {t['useful_ratio']*100:.0f}% of compiled dot flops "
+                f"are model flops -- kill redundant/remat compute")
+    return "near compute roofline: overlap the residual collectives"
+
+
+def fmt_s(x: float) -> str:
+    return (f"{x*1e6:.0f}us" if x < 0.01 else
+            f"{x*1e3:.1f}ms" if x < 1 else f"{x:.2f}s")
+
+
+def table(cells, include_suggestion=True) -> str:
+    hdr = ("| arch | shape | mode | status | compute | memory | collective "
+           "| dominant | peak GiB/chip | MF/HLO | note |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for rec in cells:
+        if rec["status"] == "skipped":
+            rows.append(
+                f"| {rec['arch']} | {rec['shape']} | {rec['mode']} | "
+                f"skipped | - | - | - | - | - | - | {rec['reason'][:60]} |")
+            continue
+        if rec["status"] != "ok":
+            rows.append(
+                f"| {rec['arch']} | {rec['shape']} | {rec['mode']} | "
+                f"FAILED | - | - | - | - | - | - | "
+                f"{rec.get('error', '')[:60]} |")
+            continue
+        t = terms(rec)
+        peak = rec["memory"]["peak_bytes"] / 2**30
+        note = suggestion(rec, t) if include_suggestion else ""
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mode']} | ok | "
+            f"{fmt_s(t['t_compute'])} | {fmt_s(t['t_memory'])} | "
+            f"{fmt_s(t['t_collective'])} | **{t['dominant']}** | "
+            f"{peak:.2f} | {t['useful_ratio']:.2f} | {note} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="/root/repo/experiments/dryrun")
+    ap.add_argument("--mesh", default="pod256")
+    args = ap.parse_args()
+    cells = load_cells(args.dir, args.mesh)
+    print(table(cells))
+    ok = [c for c in cells if c["status"] == "ok"]
+    if ok:
+        worst = min(ok, key=lambda c: terms(c)["roofline_frac"])
+        coll = max(ok, key=lambda c: terms(c)["t_collective"]
+                   / max(terms(c)["t_dominant"], 1e-12))
+        print(f"\nworst roofline fraction: {worst['arch']}/{worst['shape']}")
+        print(f"most collective-bound:  {coll['arch']}/{coll['shape']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""v5e roofline model used to *derive* TPU latencies on this CPU-only host.
+
+Hardware constants (task spec): 197 TFLOP/s bf16 per chip (394 TOPS int8,
+f32 modeled at 1/4 bf16), 819 GB/s HBM, ~50 GB/s/link ICI.
+
+``gemm_time`` returns the roofline execution-time estimate for one GEMM
+under a quantization scheme: compute term = MXU passes / peak, memory
+term = exact operand/result bytes at the scheme's stored precision / HBM
+bandwidth (this is where the paper's §4.1 bit-packed layout pays off --
+an n-bit operand moves exactly n/16 of its bf16 bytes).
+
+Scheme semantics on TPU (DESIGN.md §2):
+* ``fused``      -- ceil(n_w/7) * ceil(n_x/7) int8 MXU passes (operand-
+  level recovery; 1 pass for everything the paper evaluates).
+* ``bitserial``  -- n_w * n_x int8 MXU passes (paper-faithful §3.2
+  dataflow; on GPU these are 1-bit TC ops, the TPU has no 1-bit MXU).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+PEAK_FLOPS = {"f32": 197e12 / 4, "bf16": 197e12, "f16": 197e12,
+              "int8": 394e12}
+HBM_BW = 819e9
+LINK_BW = 50e9
+CHIPS_PER_POD = 256
+VMEM_BYTES = 128 * 2**20
+HBM_BYTES = 16 * 2**30
+
+
+@dataclasses.dataclass(frozen=True)
+class Scheme:
+    name: str
+    w_bits: float            # stored bits per weight element
+    a_bits: float            # stored bits per activation element
+    mxu: str                 # which MXU pipe the math runs on
+    passes: int = 1          # MXU passes per GEMM (bit-serial > 1)
+
+
+def fused_passes(w_bits: int, a_bits: int) -> int:
+    return math.ceil(w_bits / 7) * math.ceil(a_bits / 7)
+
+
+def scheme(name: str, variant: str = "fused") -> Scheme:
+    """Parse 'FP32' | 'BF16' | 'INT8' | 'INT4' | 'W{n}A{m}'."""
+    n = name.upper()
+    if n == "FP32":
+        return Scheme(name, 32, 32, "f32")
+    if n in ("FP16", "BF16"):
+        return Scheme(name, 16, 16, "bf16")
+    if n == "INT8":
+        return Scheme(name, 8, 8, "int8")
+    if n == "INT4":
+        # TPU v5e has no int4 MXU pipe: int4 data, int8 math
+        return Scheme(name, 4, 4, "int8")
+    if n.startswith("W"):
+        w, a = n[1:].split("A")
+        w, a = int(w), int(a)
+        passes = (w * a) if variant == "bitserial" else fused_passes(w, a)
+        return Scheme(name + ("-bs" if variant == "bitserial" else ""),
+                      w, a, "int8", passes)
+    raise ValueError(name)
+
+
+def gemm_time(m: int, n: int, k: int, sch: Scheme,
+              out_bits: int = 16) -> dict:
+    """Roofline times (s) for Y(m,n) = A(m,k) @ B(n,k)^T on ONE chip."""
+    flops = 2.0 * m * n * k * sch.passes
+    t_compute = flops / PEAK_FLOPS[sch.mxu]
+    bytes_moved = (m * k * sch.a_bits / 8 + n * k * sch.w_bits / 8
+                   + m * n * out_bits / 8)
+    t_memory = bytes_moved / HBM_BW
+    return {
+        "t_compute": t_compute,
+        "t_memory": t_memory,
+        "t": max(t_compute, t_memory),
+        "flops": flops,
+        "bytes": bytes_moved,
+        "bound": "compute" if t_compute >= t_memory else "memory",
+    }
+
+
+def tops(m: int, n: int, k: int, sch: Scheme) -> float:
+    """Effective Tera-ops/s counting *useful* ops 2mnk (like the paper)."""
+    return 2.0 * m * n * k / gemm_time(m, n, k, sch)["t"] / 1e12

@@ -1,0 +1,73 @@
+"""End-to-end driver: serve a small LLM with batched requests (the paper
+is an inference-acceleration paper, so serving is the primary e2e demo).
+
+Builds a ~15M-param llama-family model, quantizes its weights to the
+paper's W2A8 packed bipolar format, and serves a mixed queue of requests
+through the continuous-batching engine -- then does the same in bf16 and
+compares tokens/s and greedy outputs.
+
+Run:  PYTHONPATH=src python examples/serve_llm.py [--new-tokens 12]
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.models.config import QuantConfig
+from repro.serving import engine as E
+
+
+def serve(params, cfg, prompts, quant, new_tokens):
+    eng = E.Engine(params, cfg, n_slots=4, max_len=128, quant=quant)
+    reqs = [E.Request(prompt=p, max_new_tokens=new_tokens) for p in prompts]
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    eng.run()
+    dt = time.perf_counter() - t0
+    total = sum(len(r.out) for r in reqs)
+    return reqs, total / dt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--new-tokens", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_config("llama3-8b").reduced(
+        n_layers=4, d_model=256, n_heads=8, n_kv_heads=2, d_head=32,
+        d_ff=512, vocab=2048)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    print(f"model: llama-family reduced, "
+          f"{cfg.param_count() / 1e6:.1f}M params")
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, (6 + i,), dtype=np.int32)
+               for i in range(8)]
+
+    print("— serving bf16 …")
+    reqs_bf, tps_bf = serve(params, cfg, prompts, None, args.new_tokens)
+
+    qcfg = QuantConfig(w_bits=2, a_bits=8)
+    qparams = M.quantize_params(params, qcfg)
+    print("— serving W2A8 (paper technique: packed bipolar weights) …")
+    reqs_q, tps_q = serve(qparams, cfg, prompts, qcfg, args.new_tokens)
+
+    agree = np.mean([
+        np.mean(np.asarray(a.out[:4]) == np.asarray(b.out[:4]))
+        for a, b in zip(reqs_bf, reqs_q)])
+    print(f"bf16   : {tps_bf:6.1f} tok/s")
+    print(f"W2A8   : {tps_q:6.1f} tok/s   (CPU reference impl; on TPU the "
+          f"W2 path moves 8x fewer weight bytes -> see benchmarks F7)")
+    print(f"greedy agreement on first 4 tokens: {agree * 100:.0f}% "
+          f"(W2 is aggressive; this is a random-weight toy)")
+    assert all(r.done for r in reqs_bf + reqs_q)
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

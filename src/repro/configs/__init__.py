@@ -1,0 +1,27 @@
+"""Assigned architecture configs (public literature; see each file's source).
+
+``get_config(name)`` returns the full-scale :class:`ModelConfig`;
+``get_config(name).reduced()`` the CPU smoke-test variant.
+"""
+
+from importlib import import_module
+
+ARCHS = (
+    "minicpm-2b",
+    "stablelm-3b",
+    "glm4-9b",
+    "llama3-8b",
+    "mamba2-130m",
+    "jamba-1.5-large-398b",
+    "qwen2-vl-7b",
+    "deepseek-moe-16b",
+    "mixtral-8x7b",
+    "seamless-m4t-medium",
+)
+
+
+def get_config(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCHS}")
+    mod = import_module(f"repro.configs.{name.replace('-', '_').replace('.', '_')}")
+    return mod.CONFIG

@@ -1,0 +1,232 @@
+"""Bipolar-INT data format (paper §3.1) and bit-plane pack/reassembly (§4.1).
+
+An ``n``-bit bipolar-INT value ``x = x^(n-1) ... x^(1) x^(0)`` has decimal
+value
+
+    (x)_D = sum_i (2 * x^(i) - 1) * 2^i            (paper Eq. 1)
+
+i.e. every bit is interpreted as -1 (bit=0) or +1 (bit=1).  The representable
+set is the 2^n *odd* integers in ``[-(2^n - 1), 2^n - 1]`` -- perfectly
+symmetric, no sign bit, no zero-point.  Every bit-plane is handled
+identically, which is what makes the bit-serial MatMul decomposition a
+uniform parallel loop (no two's-complement MSB special case).
+
+This module is pure jnp and serves as both the public quantization API and
+the oracle for the Pallas kernels (kernels/ref.py re-exports from here).
+
+Conventions
+-----------
+* "value"  -- odd-integer bipolar value, int32.
+* "ubits"  -- the unsigned bit field ``u = (value + (2^n - 1)) / 2`` in
+  ``[0, 2^n)``; bit ``i`` of ``u`` is the bipolar bit ``x^(i)``.
+* "planes" -- bit-plane tensor, leading axis = bit index, entries in {0, 1}
+  (uint8), *interpreted* as {-1, +1}.
+* "packed" -- planes packed along the reduction axis into uint32 words,
+  planes concatenated on the leading axis (paper Fig. 3 steps 1-3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PACK_WIDTH = 32  # bits per packed word (uint32), paper §4.1 step 2
+
+
+# ---------------------------------------------------------------------------
+# Value-level encode / decode
+# ---------------------------------------------------------------------------
+
+def max_value(n_bits: int) -> int:
+    """Largest representable bipolar-INT magnitude: 2^n - 1."""
+    return (1 << n_bits) - 1
+
+
+def encode(values: jax.Array, n_bits: int) -> jax.Array:
+    """Odd-integer bipolar values -> unsigned bit field ``u`` (int32).
+
+    ``u = (v + (2^n - 1)) / 2``; bit i of u is the bipolar bit x^(i).
+    """
+    v = values.astype(jnp.int32)
+    return (v + max_value(n_bits)) >> 1
+
+
+def decode(ubits: jax.Array, n_bits: int) -> jax.Array:
+    """Unsigned bit field -> odd-integer bipolar value (int32)."""
+    return (ubits.astype(jnp.int32) << 1) - max_value(n_bits)
+
+
+def round_to_odd(x: jax.Array) -> jax.Array:
+    """Round to the nearest odd integer (ties away from the even side)."""
+    # nearest odd = 2 * round((x - 1) / 2) + 1;  jnp.round is
+    # round-half-to-even on .5 ties which keeps the result unbiased.
+    return 2.0 * jnp.round((x - 1.0) * 0.5) + 1.0
+
+
+def quantize_values(x: jax.Array, n_bits: int, scale: jax.Array) -> jax.Array:
+    """Real tensor -> odd-integer bipolar values (int32), symmetric scaling.
+
+    ``q = clip(round_to_odd(x / scale), -(2^n-1), 2^n-1)``.
+    """
+    m = max_value(n_bits)
+    q = round_to_odd(x / scale)
+    return jnp.clip(q, -m, m).astype(jnp.int32)
+
+
+def absmax_scale(x: jax.Array, n_bits: int, axis=None, keepdims=True,
+                 eps: float = 1e-8) -> jax.Array:
+    """Symmetric absmax scale so that absmax maps to +-(2^n - 1)."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=keepdims)
+    return jnp.maximum(amax, eps) / max_value(n_bits)
+
+
+# ---------------------------------------------------------------------------
+# Bit-plane decomposition / recovery (paper §3.2 data decomposition step)
+# ---------------------------------------------------------------------------
+
+def decompose(values: jax.Array, n_bits: int) -> jax.Array:
+    """Bipolar values -> bit planes ``(n_bits, *shape)`` uint8 in {0,1}."""
+    u = encode(values, n_bits)
+    shifts = jnp.arange(n_bits, dtype=jnp.int32)
+    shifts = shifts.reshape((n_bits,) + (1,) * values.ndim)
+    return ((u[None] >> shifts) & 1).astype(jnp.uint8)
+
+
+def recover(planes: jax.Array, n_bits: int) -> jax.Array:
+    """Bit planes -> bipolar values (int32).  Inverse of :func:`decompose`."""
+    weights = (1 << jnp.arange(n_bits, dtype=jnp.int32))
+    weights = weights.reshape((n_bits,) + (1,) * (planes.ndim - 1))
+    signed = 2 * planes.astype(jnp.int32) - 1          # {0,1} -> {-1,+1}
+    return jnp.sum(signed * weights, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# uint32 packing / reassembly (paper §4.1, Fig. 3)
+# ---------------------------------------------------------------------------
+
+def packed_words(k: int) -> int:
+    """Number of uint32 words covering ``k`` reduction elements."""
+    return (k + PACK_WIDTH - 1) // PACK_WIDTH
+
+
+def pack_planes(planes: jax.Array, axis: int) -> jax.Array:
+    """Pack {0,1} planes into uint32 words along ``axis`` (step 2 of Fig. 3).
+
+    ``axis`` indexes the *underlying tensor* dims (excluding the leading
+    plane axis).  The packed axis shrinks by 32x; ``axis`` length must be a
+    multiple of 32 (callers pad with :func:`pad_for_packing` first).
+
+    Bit layout: element ``k`` lives in word ``k // 32`` at bit ``k % 32``.
+    """
+    axis = axis + 1 if axis >= 0 else axis  # account for leading plane axis
+    k = planes.shape[axis]
+    if k % PACK_WIDTH != 0:
+        raise ValueError(f"pack axis length {k} not a multiple of {PACK_WIDTH}")
+    x = jnp.moveaxis(planes, axis, -1).astype(jnp.uint32)
+    x = x.reshape(x.shape[:-1] + (k // PACK_WIDTH, PACK_WIDTH))
+    shifts = jnp.arange(PACK_WIDTH, dtype=jnp.uint32)
+    words = jnp.sum(x << shifts, axis=-1, dtype=jnp.uint32)
+    return jnp.moveaxis(words, -1, axis)
+
+
+def unpack_planes(packed: jax.Array, axis: int, k: int) -> jax.Array:
+    """uint32 words -> {0,1} planes (uint8); inverse of :func:`pack_planes`."""
+    axis = axis + 1 if axis >= 0 else axis
+    x = jnp.moveaxis(packed, axis, -1)
+    shifts = jnp.arange(PACK_WIDTH, dtype=jnp.uint32)
+    bits = (x[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(x.shape[:-1] + (x.shape[-1] * PACK_WIDTH,))
+    bits = bits[..., :k]
+    return jnp.moveaxis(bits, -1, axis).astype(jnp.uint8)
+
+
+def pad_for_packing(planes: jax.Array, axis: int, pad_bit: int) -> jax.Array:
+    """Pad the pack axis to a multiple of 32 with a constant bit.
+
+    Padding a bipolar plane is never free (bit 0 *means* -1), so matmul
+    callers pad W with bit 1 (+1) and X with bit 0 (-1) and subtract the
+    closed-form correction ``n_pad * (2^{n_w}-1) * (2^{n_x}-1) * (-1)``
+    (see :func:`pad_correction`).
+    """
+    axis = axis + 1 if axis >= 0 else axis
+    k = planes.shape[axis]
+    pad = (-k) % PACK_WIDTH
+    if pad == 0:
+        return planes
+    cfg = [(0, 0)] * planes.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(planes, cfg, constant_values=pad_bit)
+
+
+def pad_correction(k: int, n_w: int, n_x: int) -> int:
+    """Additive correction for W-pad-bit=1 / X-pad-bit=0 K padding.
+
+    Each padded k contributes ``(sum_i 2^i * (+1)) * (sum_j 2^j * (-1))
+    = -(2^{n_w}-1)(2^{n_x}-1)`` to every output element; the true product
+    is ``Y_raw + n_pad * (2^{n_w}-1)(2^{n_x}-1)``.
+    """
+    n_pad = (-k) % PACK_WIDTH
+    return n_pad * max_value(n_w) * max_value(n_x)
+
+
+# ---------------------------------------------------------------------------
+# Quantized tensor container
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BipolarTensor:
+    """A bipolar-INT quantized tensor in packed §4.1 layout.
+
+    ``packed`` has shape ``(n_bits, *shape_with_K_packed)`` -- the n planes
+    are concatenated on the leading axis (Fig. 3 step 3) with the reduction
+    axis packed 32x into uint32 (step 2).  ``scale`` broadcasts against the
+    dequantized tensor.
+    """
+    packed: jax.Array
+    scale: jax.Array
+    n_bits: int = dataclasses.field(metadata=dict(static=True))
+    shape: tuple = dataclasses.field(metadata=dict(static=True))
+    pack_axis: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def nbytes_packed(self) -> int:
+        return int(np.prod(self.packed.shape)) * 4 + int(np.prod(self.scale.shape)) * self.scale.dtype.itemsize
+
+    @property
+    def nbytes_dense_bf16(self) -> int:
+        return int(np.prod(self.shape)) * 2
+
+
+def quantize_pack(x: jax.Array, n_bits: int, pack_axis: int,
+                  scale_axis=None, pad_bit: int = 1) -> BipolarTensor:
+    """Real tensor -> packed bipolar-INT (quantize + decompose + pack).
+
+    ``scale_axis``: axes reduced for the absmax scale (None = per-tensor).
+    ``pad_bit``: 1 for weights (LHS), 0 for activations (RHS) -- see
+    :func:`pad_correction`.
+    """
+    if scale_axis is None:
+        scale = absmax_scale(x, n_bits)
+    else:
+        scale = absmax_scale(x, n_bits, axis=scale_axis, keepdims=True)
+    q = quantize_values(x, n_bits, scale)
+    planes = decompose(q, n_bits)
+    planes = pad_for_packing(planes, pack_axis, pad_bit)
+    packed = pack_planes(planes, pack_axis)
+    return BipolarTensor(packed=packed, scale=scale.astype(jnp.float32),
+                         n_bits=n_bits, shape=tuple(x.shape),
+                         pack_axis=pack_axis if pack_axis >= 0 else x.ndim + pack_axis)
+
+
+def dequantize(t: BipolarTensor) -> jax.Array:
+    """Packed bipolar-INT -> real tensor (float32)."""
+    k = t.shape[t.pack_axis]
+    planes = unpack_planes(t.packed, t.pack_axis, k)
+    values = recover(planes, t.n_bits)
+    return values.astype(jnp.float32) * t.scale

@@ -1,0 +1,234 @@
+"""Sharding rules: DP / FSDP / TP / EP / SP specs for every tree.
+
+Strategy (DESIGN.md §5):
+* weights: TP ("model") on the head/ffn/vocab dimension + FSDP ("data") on
+  the other matrix dimension -- XLA inserts the per-use all-gather
+  (ZeRO-3 style).  Column/row pairing (wq/wk/wv/w_up/w_gate column,
+  wo/w_down row) keeps one reduce per residual write.
+* MoE experts: EP on the expert dim when divisible by the model axis,
+  else TP on d_ff (mixtral's 8 < 16, DESIGN.md §6).
+* activations: the scanned residual stream is sequence-sharded over
+  "model" between blocks (Megatron-SP analogue) -- applied by the model
+  via :func:`constrain` -- and batch-sharded over the DP axes.
+* packed bipolar weights (serving): same rules -- the plane axis rides as
+  a leading dim, the packed-word axis inherits the FSDP ("data") shard.
+* every sharded dim is divisibility-checked; non-dividing axes fall back
+  to replication (e.g. mamba2-130m's 3352-row in_proj -> DP-only,
+  DESIGN.md §6).
+
+Rules are *suffix-aligned*: a candidate spec binds to the trailing dims of
+the leaf, so scan-stack / bit-plane / expert prefixes are automatically
+unsharded unless the rule names them.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _key_str(p):
+    for attr in ("key", "name", "idx"):
+        v = getattr(p, attr, None)
+        if v is not None:
+            return v if isinstance(v, str) else None
+    return None
+
+
+def _axes_size(mesh, axis):
+    if axis is None:
+        return 1
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fit(mesh, shape, spec_axes) -> P:
+    """Suffix-align a candidate spec to ``shape`` and drop axes that do not
+    divide their dim."""
+    spec_axes = tuple(spec_axes)
+    if len(spec_axes) > len(shape):
+        spec_axes = spec_axes[len(spec_axes) - len(shape):]
+    full = (None,) * (len(shape) - len(spec_axes)) + spec_axes
+    fixed = [ax if ax is not None and dim % _axes_size(mesh, ax) == 0
+             else None
+             for dim, ax in zip(shape, full)]
+    return P(*fixed)
+
+
+def _dp_axis(mesh):
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return dp if len(dp) > 1 else dp[0]
+
+
+# ---------------------------------------------------------------------------
+# activation-sharding context (used by model code via `constrain`)
+# ---------------------------------------------------------------------------
+
+_CTX: dict = {"mesh": None, "rules": {}}
+_MOE_MODE = "ep"   # "ep": experts over model axis | "tp": d_ff over model
+                   # (tp avoids token resharding through the dispatch
+                   # scatter -- hillclimb lever, EXPERIMENTS.md §Perf)
+
+
+def set_moe_mode(mode: str):
+    global _MOE_MODE
+    assert mode in ("ep", "tp")
+    _MOE_MODE = mode
+
+
+def set_activation_context(mesh: Optional[Mesh],
+                           rules: Optional[dict] = None,
+                           extra=()):
+    """Install the mesh + activation specs the model constrains to.
+
+    ``rules``: name -> PartitionSpec.  ``None`` mesh disables constraints
+    (single-device tests).  ``extra``: names of opt-in hillclimb rules
+    (e.g. "attn_chunks")."""
+    _CTX["mesh"] = mesh
+    _CTX["rules"] = rules if rules is not None else (
+        default_activation_rules(mesh, extra) if mesh is not None else {})
+
+
+def constrain(x, name: str):
+    """Apply a named activation constraint if a context is installed."""
+    mesh, rules = _CTX["mesh"], _CTX["rules"]
+    if mesh is None or name not in rules:
+        return x
+    spec = _fit(mesh, x.shape, tuple(rules[name]))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def default_activation_rules(mesh, extra=()) -> dict:
+    dp = _dp_axis(mesh)
+    rules = {
+        # residual stream between blocks: batch over DP, sequence over
+        # model (Megatron-SP analogue; bounds the remat stash per chip)
+        "residual": P(dp, "model", None),
+        # grouped MoE dispatch buffer (G, E, C, d): token groups over DP
+        # (local capacity), experts over model in EP mode
+        "moe_dispatch": (P(dp, "model", None, None) if _MOE_MODE == "ep"
+                         else P(dp, None, None, None)),
+        # combine side: expert outputs resharded token-local (G over DP,
+        # E replicated) so the per-token gather needs no model-axis
+        # all-gather -- the reshard itself is an all-to-all
+        "moe_combine": P(dp, None, None, "model"),
+    }
+    if "attn_chunks" in extra:
+        # stacked KV chunks (nc, B, Hkv, ck, D) in the online-softmax scan:
+        # keep the chunk axis UNSHARDED so per-iteration dynamic-slice does
+        # not reshard (kills the involuntary-full-remat copies)
+        rules["attn_chunks"] = P(None, dp, "model", None, None)
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding rules
+# ---------------------------------------------------------------------------
+
+# column-parallel: d_out on model, d_in(/packed words) on data (FSDP)
+_COL = ("wq", "wk", "wv", "w_up", "w_gate", "in_proj", "lm_head", "frontend",
+        "embed")
+# row-parallel: d_in on model, d_out on data
+_ROW = ("wo", "w_down", "out_proj")
+_SKIP_NAMES = ("w", "packed", "scale", "blocks", "prelude", "mixer", "ffn",
+               "attn", "shared", "encoder", "cross")
+
+
+def _param_spec(mesh, path_keys, shape) -> P:
+    name = next((k for k in reversed(path_keys)
+                 if k is not None and k not in _SKIP_NAMES), None)
+    nd = len(shape)
+    if name == "router" or nd <= 1:
+        return P(*([None] * nd))
+    moe_expert = path_keys and any(
+        k in ("w_up", "w_gate", "w_down") for k in path_keys if k) \
+        and nd >= 3 and name not in ("shared",)
+    is_shared = "shared" in [k for k in path_keys if k]
+    if moe_expert and not is_shared:
+        # trailing dims (E, d_out, d_in[/Kw]); EP on E when divisible
+        if _MOE_MODE == "ep" and shape[-3] % mesh.shape["model"] == 0:
+            return _fit(mesh, shape, ("model", None, "data"))
+        if name in ("w_up", "w_gate"):
+            return _fit(mesh, shape, (None, "model", "data"))
+        return _fit(mesh, shape, (None, "data", "model"))
+    if name in _COL:
+        return _fit(mesh, shape, ("model", "data"))
+    if name in _ROW:
+        return _fit(mesh, shape, ("data", "model"))
+    if name == "conv_w":
+        return _fit(mesh, shape, (None, "model"))
+    return P(*([None] * nd))
+
+
+def shardings_for_params(mesh: Mesh, params):
+    """NamedSharding tree for params (also fits optimizer moments/scales:
+    map over the moment tree -- same structure, same trailing dims)."""
+    def spec_of(path, leaf):
+        keys = [_key_str(p) for p in path]
+        return NamedSharding(mesh, _param_spec(mesh, keys,
+                                               getattr(leaf, "shape", ())))
+
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def shardings_for_batch(mesh: Mesh, batch):
+    dp = _dp_axis(mesh)
+
+    def spec_of(path, leaf):
+        keys = [_key_str(p) for p in path]
+        shape = leaf.shape
+        if keys and keys[-1] == "positions" and len(shape) == 3:
+            # M-RoPE ids (3, B, S)
+            return NamedSharding(mesh, _fit(mesh, shape, (None, dp, None)))
+        cand = (dp,) + (None,) * (max(len(shape) - 1, 0))
+        # prefix-aligned: batch is the leading dim
+        full = cand[:len(shape)]
+        fixed = [ax if ax is not None and d % _axes_size(mesh, ax) == 0
+                 else None for d, ax in zip(shape, full)]
+        return NamedSharding(mesh, P(*fixed))
+
+    return jax.tree_util.tree_map_with_path(spec_of, batch)
+
+
+# expected trailing layouts per cache leaf name
+_CACHE_RULES = {
+    "k": ("__dp__", "model", None, None),      # (B, L, Hkv, Dh): L is SP-
+    "v": ("__dp__", "model", None, None),      # sharded for long contexts
+    "k_scale": ("__dp__", "model", None, None),
+    "v_scale": ("__dp__", "model", None, None),
+    "pos": ("__dp__", "model"),
+    "index": ("__dp__",),
+    "state": ("__dp__", "model", None, None),  # (B, H, P, N)
+    "conv": ("__dp__", None, "model"),         # (B, w, conv_dim)
+}
+
+
+def shardings_for_caches(mesh: Mesh, caches):
+    dp = _dp_axis(mesh)
+
+    def spec_of(path, leaf):
+        keys = [_key_str(p) for p in path]
+        name = next((k for k in reversed(keys) if k), "")
+        rule = _CACHE_RULES.get(name, ("__dp__",))
+        rule = tuple(dp if r == "__dp__" else r for r in rule)
+        shape = leaf.shape
+        # suffix-align so stacked (n_units, ...) caches work, but keep the
+        # batch axis aligned to its true position: pad on the LEFT only by
+        # the stacking prefix (ndim - len(rule)).
+        return NamedSharding(mesh, _fit(mesh, shape, rule))
+
+    return jax.tree_util.tree_map_with_path(spec_of, caches)
+
+
+def replicated(mesh: Mesh, tree):
+    return jax.tree.map(lambda leaf: NamedSharding(mesh, P()), tree)

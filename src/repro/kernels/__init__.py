@@ -1,0 +1,6 @@
+"""APMM kernel layer: Pallas TPU kernels + jnp oracles + dispatch.
+
+The paper's compute hot-spot is the arbitrary-precision GEMM (§3.2 + §4.2)
+and the §4.1 quantize/pack preprocessing -- both have Pallas kernels here.
+"""
+from repro.kernels import apmm, ops, pack, ref  # noqa: F401

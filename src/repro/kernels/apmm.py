@@ -1,0 +1,217 @@
+"""Arbitrary-precision MatMul (APMM) Pallas TPU kernels.
+
+Implements the paper's bit-wise MatMul reconstitution (§3.2) with the
+recovery-oriented memory scheduling of §4.2, adapted from GPU shared
+memory / tensor-core fragments to the TPU memory hierarchy:
+
+* HBM holds only the §4.1 *packed* layout: both operands are row-major and
+  packed along their last (reduction) axis K into uint32 words --
+  ``A (n_a, M, K/32)`` for activations (tokens x features, pad bit 0) and
+  ``B (n_b, N, K/32)`` for weights (d_out x d_in, pad bit 1).  The GEMM is
+  "NT" (``Y = A @ B^T``), so no operand transpose ever materializes and an
+  n-bit matrix costs exactly n bits/element of HBM traffic.
+* Each Pallas grid cell owns one ``(bm, bn)`` output tile (the paper's
+  "one SM computes all bit-pair products of one block", §4.2 ①); all
+  ``n_a * n_b`` bit-plane combinations for that tile are produced from
+  VMEM-resident packed tiles, so *recovery never touches HBM* (§4.2 ②).
+* Pallas grid pipelining double-buffers the HBM->VMEM tile streams --
+  the TPU analogue of the paper's two alternating shared-memory buffers
+  (§4.2 ③).
+* Two variants:
+
+  - ``variant="bitserial"`` (paper-faithful): unpack each plane to a
+    {-1,+1} int8 tile, run one MXU GEMM per (i, j) bit pair, keep
+    ``n_a * n_b`` int32 accumulators in VMEM scratch, and shift-add them
+    into the output after the K loop -- the literal §3.2 dataflow with the
+    §4.2 ④ loop order (one A plane reused against all B planes).  On GPU
+    each per-pair GEMM is a 1-bit XOR-popcount MMA; the TPU has no 1-bit
+    MXU mode, so plane GEMMs execute as int8 MXU ops (DESIGN.md §2,
+    "what does not transfer").
+
+  - ``variant="fused"`` (beyond-paper, TPU-native): because the MXU's
+    atomic precision is already int8, the recovery sum can be folded into
+    the *operands* -- ``(sum_i 2^i A^(i)) (sum_j 2^j B^(j))^T =
+    sum_ij 2^{i+j} A^(i) B^(j)T`` exactly -- turning ``n_a * n_b`` GEMMs
+    into one int8 GEMM per tile (valid for bit-widths <= 7).
+
+K padding to the 32-bit word boundary is corrected in closed form by
+pre-loading the accumulator with ``n_pad * (2^{n_a}-1)(2^{n_b}-1)``, so
+arbitrary K is exact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import bipolar
+from repro.kernels import ref
+
+# Default tile sizes: MXU-aligned (multiples of 128 on the GEMM dims) and
+# sized so packed tiles + unpacked int8 tiles + the int32 accumulator fit
+# v5e VMEM (~128 MiB) with double buffering:
+#   packed A/B      n * 256 * (512/32) * 4 B  = n * 16 KiB each
+#   unpacked int8   2 * 256 * 512             = 256 KiB
+#   acc int32       256 * 256 * 4             = 256 KiB (x n_a*n_b bitserial)
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+DEFAULT_BK = 512
+
+_NT = (((1,), (1,)), ((), ()))  # contract last dims (A @ B^T)
+
+
+def _unpack(p, n_bits: int, r: int, bk: int):
+    """(n, r, bk//32) uint32 -> (n, r, bk) int32 bit planes in {0,1}.
+
+    Element k = 32*w + b of a row is bit b of word w: unpack the 32 bits of
+    each word onto a trailing axis and merge it with the word axis.
+    """
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 1, 32), 3)
+    bits = (p[..., None] >> shifts) & jnp.uint32(1)        # (n, r, bk32, 32)
+    return bits.reshape(n_bits, r, bk).astype(jnp.int32)
+
+
+def _recover_int8(planes, lo: int, size: int):
+    """{0,1} planes (n, r, k) -> recombined bipolar int8 (r, k) for the
+    plane group ``[lo, lo+size)``.
+
+    ``sum_{i in group} 2^{i-lo} (2 b_i - 1)
+        = (sum b_i << (i-lo+1)) - (2^size - 1)``.
+    """
+    acc = planes[lo] << 1
+    for i in range(lo + 1, lo + size):
+        acc = acc + (planes[i] << (i - lo + 1))
+    return (acc - bipolar.max_value(size)).astype(jnp.int8)
+
+
+def _kernel(ap_ref, bp_ref, as_ref, bs_ref, out_ref, acc_ref, *,
+            n_a: int, n_b: int, bm: int, bn: int, bk: int,
+            n_pad: int, variant: str, dequant: bool):
+    k_idx = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    ap = _unpack(ap_ref[...], n_a, bm, bk)         # {0,1} int32
+    bp = _unpack(bp_ref[...], n_b, bn, bk)
+
+    if variant == "fused":
+        # Operand-level recovery: one int8 MXU GEMM per <=7-bit plane-group
+        # pair (a single GEMM for the common n <= 7 case).
+        @pl.when(k_idx == 0)
+        def _init():
+            acc_ref[...] = jnp.full(
+                (bm, bn),
+                n_pad * bipolar.max_value(n_a) * bipolar.max_value(n_b),
+                jnp.int32)
+
+        for lo_a, sz_a in ref.plane_groups(n_a):
+            a8 = _recover_int8(ap, lo_a, sz_a)     # (bm, bk) int8
+            for lo_b, sz_b in ref.plane_groups(n_b):
+                b8 = _recover_int8(bp, lo_b, sz_b)  # (bn, bk) int8
+                y = jax.lax.dot_general(
+                    a8, b8, _NT, preferred_element_type=jnp.int32)
+                acc_ref[...] += y << (lo_a + lo_b)
+    else:
+        # Paper-faithful §3.2: one GEMM per bit pair; per-pair accumulators
+        # live in VMEM scratch ("recovery in shared memory", §4.2).
+        @pl.when(k_idx == 0)
+        def _init():
+            acc_ref[...] = jnp.full((n_a * n_b, bm, bn), n_pad, jnp.int32)
+
+        for i in range(n_a):                        # §4.2 ④ loop order:
+            a8 = (2 * ap[i] - 1).astype(jnp.int8)   # one A plane ...
+            for j in range(n_b):                    # ... x all B planes
+                b8 = (2 * bp[j] - 1).astype(jnp.int8)
+                acc_ref[i * n_b + j] += jax.lax.dot_general(
+                    a8, b8, _NT, preferred_element_type=jnp.int32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _finish():
+        if variant == "fused":
+            y = acc_ref[...]
+        else:
+            # Shift-add recovery Y = sum_ij 2^{i+j} Y^(ij)  (paper Fig. 2).
+            y = jnp.zeros((bm, bn), jnp.int32)
+            for i in range(n_a):
+                for j in range(n_b):
+                    y = y + (acc_ref[i * n_b + j] << (i + j))
+        if dequant:
+            yf = y.astype(jnp.float32) * as_ref[...] * bs_ref[...]
+            out_ref[...] = yf.astype(out_ref.dtype)
+        else:
+            out_ref[...] = y
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_a", "n_b", "k_orig", "variant", "block",
+                     "out_dtype", "interpret"))
+def apmm_packed(ap: jax.Array, bp: jax.Array, a_scale, b_scale, *,
+                n_a: int, n_b: int, k_orig: int,
+                variant: str = "fused",
+                block: tuple = (DEFAULT_BM, DEFAULT_BN, DEFAULT_BK),
+                out_dtype=jnp.float32,
+                interpret: bool = False) -> jax.Array:
+    """Packed-layout arbitrary-precision NT GEMM: ``Y = A @ B^T``.
+
+    Args:
+      ap: ``(n_a, M, Kw)`` uint32 packed A planes (pad bit 0).
+      bp: ``(n_b, N, Kw)`` uint32 packed B planes (pad bit 1).
+      a_scale: ``(M, 1)`` f32 per-row scales, or None (with b_scale=None)
+        for a raw int32 output.
+      b_scale: ``(N, 1)`` f32 per-row (output-channel) scales.
+      k_orig: unpadded reduction length (pad columns are corrected in
+        closed form).
+      variant: "fused" | "bitserial" (see module docstring).
+      block: ``(bm, bn, bk)`` tile sizes; ``bk % 32 == 0``.
+
+    Shapes must tile exactly: ``M % bm == N % bn == (Kw*32) % bk == 0``
+    (the :mod:`repro.kernels.ops` wrapper pads and unpads).
+    """
+    n_a_, m, kw = ap.shape
+    n_b_, n, kw2 = bp.shape
+    assert (n_a_, n_b_) == (n_a, n_b) and kw == kw2, (ap.shape, bp.shape)
+    bm, bn, bk = block
+    bm, bn = min(bm, m), min(bn, n)
+    kp = kw * bipolar.PACK_WIDTH
+    bk = min(bk, kp)
+    if bk % bipolar.PACK_WIDTH:
+        raise ValueError(f"bk={bk} must be a multiple of {bipolar.PACK_WIDTH}")
+    if m % bm or n % bn or kp % bk:
+        raise ValueError(f"({m},{n},{kp}) not tiled by ({bm},{bn},{bk})")
+    bk32 = bk // bipolar.PACK_WIDTH
+    dequant = a_scale is not None
+    if dequant:
+        assert b_scale is not None
+        a_scale = a_scale.reshape(m, 1).astype(jnp.float32)
+        b_scale = b_scale.reshape(1, n).astype(jnp.float32)
+    else:
+        out_dtype = jnp.int32
+        # dummy 1-element scale operands keep a single kernel signature
+        a_scale = jnp.ones((m, 1), jnp.float32)
+        b_scale = jnp.ones((1, n), jnp.float32)
+
+    grid = (m // bm, n // bn, kp // bk)
+    acc_shape = ((bm, bn) if variant == "fused" else (n_a * n_b, bm, bn))
+    kernel = functools.partial(
+        _kernel, n_a=n_a, n_b=n_b, bm=bm, bn=bn, bk=bk,
+        n_pad=kp - k_orig, variant=variant, dequant=dequant)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_a, bm, bk32), lambda i, j, k: (0, i, k)),
+            pl.BlockSpec((n_b, bn, bk32), lambda i, j, k: (0, j, k)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM(acc_shape, jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(ap, bp, a_scale, b_scale)

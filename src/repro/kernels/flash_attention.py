@@ -1,0 +1,115 @@
+"""Flash attention (online softmax) Pallas TPU kernel.
+
+Motivated by the roofline analysis (EXPERIMENTS.md §Perf): prefill cells
+of MHA-heavy archs are dominated by materialized (Sq x T) score traffic
+-- e.g. minicpm-2b/prefill_32k moves ~26 TiB/chip, ~80% of it score
+tensors the jnp dataflow must round-trip through HBM.  This kernel keeps
+the score tile in VMEM: HBM traffic drops to Q/K/V/O (+tiny pos masks).
+
+Layout: heads folded into batch -- ``q (BH, Sq, D)``, ``k/v (BH, T, D)``,
+``q_pos (BH, Sq)``, ``kv_pos (BH, T)`` int32 (negative kv_pos = invalid
+slot, matching the cache convention).  Causal/window masking is by
+absolute position, so GQA folding, ring caches and padded prefixes all
+work unchanged.
+
+Grid ``(BH, Sq/bq, T/bk)`` with the KV axis innermost ("arbitrary");
+scratch: running max/denominator ``(bq, 1)`` and the f32 output
+accumulator ``(bq, D)`` -- the classic two-pass-free online softmax.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 512
+DEFAULT_BK = 512
+
+
+def _kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, out_ref,
+            m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window, bq: int, bk: int, d: int):
+    jk = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full((bq, 1), -1e30, jnp.float32)
+        l_ref[...] = jnp.zeros((bq, 1), jnp.float32)
+        acc_ref[...] = jnp.zeros((bq, d), jnp.float32)
+
+    q = q_ref[0]                                  # (bq, d)
+    k = k_ref[0]                                  # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qpos = qp_ref[0][:, None]                     # (bq, 1) int32
+    kpos = kp_ref[0][None, :]                     # (1, bk)
+    valid = kpos >= 0
+    if causal:
+        valid &= kpos <= qpos
+    if window is not None:
+        valid &= kpos > qpos - window
+    s = jnp.where(valid, s, -1e30)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * alpha + jnp.sum(p, -1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(jk == nk - 1)
+    def _done():
+        out_ref[0] = (acc_ref[...]
+                      / jnp.maximum(l_ref[...], 1e-20)).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    q_pos: jax.Array, kv_pos: jax.Array, *,
+                    causal: bool = True, window=None,
+                    block: tuple = (DEFAULT_BQ, DEFAULT_BK),
+                    interpret: bool = False) -> jax.Array:
+    """Online-softmax attention. q (BH,Sq,D), k/v (BH,T,D) -> (BH,Sq,D).
+
+    Shapes must tile exactly (wrapper in ops pads); fully-masked rows
+    return 0 (denominator clamp), matching the jnp reference.
+    """
+    bh, sq, d = q.shape
+    t = k.shape[1]
+    bq, bk = min(block[0], sq), min(block[1], t)
+    if sq % bq or t % bk:
+        raise ValueError(f"({sq},{t}) not tiled by ({bq},{bk})")
+    kernel = functools.partial(
+        _kernel, scale=1.0 / np.sqrt(d), causal=causal, window=window,
+        bq=bq, bk=bk, d=d)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, sq // bq, t // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),       # q_pos
+            pl.BlockSpec((1, bk), lambda b, i, j: (b, j)),       # kv_pos
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),  # q
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),  # k
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),  # v
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, d), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q_pos, kv_pos, q, k, v)

@@ -1,0 +1,167 @@
+"""Dispatch layer for the APMM kernels.
+
+Every quantized op runs under one of three interchangeable implementations:
+
+* ``"pallas"``    -- the real Pallas TPU kernels (Mosaic), for TPU targets.
+* ``"interpret"`` -- the same Pallas kernels under ``interpret=True``
+  (kernel body executed in Python on CPU) -- used by the correctness suite.
+* ``"reference"`` -- pure-jnp dataflow (:mod:`repro.kernels.ref`) operating
+  on the *same packed buffers*; used inside jitted model graphs on CPU and
+  in the 512-device dry-run, where a Mosaic kernel cannot lower.
+
+The default comes from ``$REPRO_KERNEL_IMPL`` or the JAX backend
+(``pallas`` on TPU, ``reference`` elsewhere).
+"""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bipolar
+from repro.core.bipolar import BipolarTensor
+from repro.kernels import apmm as apmm_kernel
+from repro.kernels import pack as pack_kernel
+from repro.kernels import ref
+
+_IMPLS = ("pallas", "interpret", "reference")
+_impl_override = None
+
+
+def default_impl() -> str:
+    if _impl_override is not None:
+        return _impl_override
+    env = os.environ.get("REPRO_KERNEL_IMPL")
+    if env:
+        assert env in _IMPLS, env
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+
+def set_impl(impl) -> None:
+    """Override the global kernel implementation (None = auto)."""
+    global _impl_override
+    assert impl is None or impl in _IMPLS, impl
+    _impl_override = impl
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _pad_dim(arr: jax.Array, axis: int, target: int, value=0) -> jax.Array:
+    pad = target - arr.shape[axis]
+    if pad <= 0:
+        return arr
+    cfg = [(0, 0)] * arr.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(arr, cfg, constant_values=np.asarray(value, arr.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Quantize + pack
+# ---------------------------------------------------------------------------
+
+def quantize_rows(x: jax.Array, n_bits: int, *, pad_bit: int,
+                  impl: str | None = None,
+                  scale: jax.Array | None = None) -> BipolarTensor:
+    """Quantize a row-major ``(R, K)`` matrix to packed bipolar planes.
+
+    Per-row absmax scales; K padded to the 32-bit word boundary with the
+    given pad bit (0 for activations/LHS, 1 for weights/RHS).
+    """
+    impl = impl or default_impl()
+    r, k = x.shape
+    if scale is None:
+        scale = bipolar.absmax_scale(x, n_bits, axis=-1, keepdims=True)
+    scale = scale.astype(jnp.float32).reshape(r, 1)
+    if impl == "reference":
+        q = bipolar.quantize_values(x, n_bits, scale)
+        planes = bipolar.decompose(q, n_bits)
+        planes = bipolar.pad_for_packing(planes, -1, pad_bit)
+        packed = bipolar.pack_planes(planes, -1)
+    else:
+        kp = _round_up(k, bipolar.PACK_WIDTH)
+        maxv = bipolar.max_value(n_bits)
+        pad_val = scale * (maxv if pad_bit else -maxv)   # all-1/all-0 bits
+        xp = _pad_dim(x.astype(jnp.float32), 1, kp)
+        if kp > k:
+            xp = xp.at[:, k:].set(jnp.broadcast_to(pad_val, (r, kp - k)))
+        # row tiling: pad rows to the block multiple, slice planes after
+        br = min(pack_kernel.DEFAULT_BR, _round_up(r, 8))
+        rp = _round_up(r, br)
+        xp = _pad_dim(xp, 0, rp, 1.0)
+        sp = _pad_dim(scale, 0, rp, 1.0)
+        bk = next(b for b in (1024, 512, 256, 128, 64, 32) if kp % b == 0)
+        packed = pack_kernel.quantize_pack_rows(
+            xp, sp, n_bits=n_bits, block=(br, bk),
+            interpret=(impl == "interpret"))[:, :r, :]
+    return BipolarTensor(packed=packed, scale=scale, n_bits=n_bits,
+                         shape=(r, k), pack_axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Arbitrary-precision GEMM
+# ---------------------------------------------------------------------------
+
+def ap_matmul(a: BipolarTensor, b: BipolarTensor, *,
+              variant: str = "fused", impl: str | None = None,
+              out_dtype=jnp.float32, raw: bool = False) -> jax.Array:
+    """NT GEMM of packed tensors: ``Y (M,N) = A (M,K) @ B (N,K)^T``.
+
+    ``raw=True`` returns the exact int32 product of the bipolar integer
+    values (no scale dequant).
+    """
+    impl = impl or default_impl()
+    if impl == "reference":
+        if raw:
+            return ref.apmm_packed_ref(a, b, fused=(variant == "fused"))
+        return ref.apmm_dequant_ref(a, b, fused=(variant == "fused"),
+                                    out_dtype=out_dtype)
+    (m, k), (n, _) = a.shape, b.shape
+    ap, bp = a.packed, b.packed
+    kw = ap.shape[-1]
+    assert bp.shape[-1] == kw, "operands packed to different K widths"
+    # --- pad to tile multiples ------------------------------------------
+    bm = min(apmm_kernel.DEFAULT_BM, _round_up(m, 8))
+    bn = min(apmm_kernel.DEFAULT_BN, _round_up(n, 128))
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+    kp0 = kw * bipolar.PACK_WIDTH
+    bk = min(apmm_kernel.DEFAULT_BK, _round_up(kp0, 32))
+    kp = _round_up(kp0, bk)
+    ap = _pad_dim(_pad_dim(ap, 1, mp), 2, kp // 32, 0x00000000)  # A pads: bit 0
+    bp = _pad_dim(_pad_dim(bp, 1, np_), 2, kp // 32, 0xFFFFFFFF)  # B pads: bit 1
+    a_scale = None if raw else _pad_dim(a.scale.reshape(m, 1), 0, mp, 1.0)
+    b_scale = None if raw else _pad_dim(b.scale.reshape(n, 1), 0, np_, 1.0)
+    y = apmm_kernel.apmm_packed(
+        ap, bp, a_scale, b_scale, n_a=a.n_bits, n_b=b.n_bits, k_orig=k,
+        variant=variant, block=(bm, bn, bk), out_dtype=out_dtype,
+        interpret=(impl == "interpret"))
+    return y[:m, :n]
+
+
+def ap_linear(x: jax.Array, w: BipolarTensor, *, a_bits: int,
+              variant: str = "fused", impl: str | None = None,
+              out_dtype=None) -> jax.Array:
+    """Quantized linear: ``y (..., N) = x (..., K) @ W (N, K)^T``.
+
+    Activations are quantized on the fly (per-token absmax, the paper's
+    runtime preprocessing path); weights arrive pre-packed.
+    """
+    impl = impl or default_impl()
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    xq = quantize_rows(x.reshape(-1, k), a_bits, pad_bit=0, impl=impl)
+    y = ap_matmul(xq, w, variant=variant, impl=impl, out_dtype=out_dtype)
+    return y.reshape(*lead, w.shape[0])
+
+
+def pack_weight(w: jax.Array, n_bits: int, *,
+                impl: str | None = None) -> BipolarTensor:
+    """Offline weight preprocessing (§4.1): ``W (d_out, d_in)`` -> packed."""
+    return quantize_rows(w, n_bits, pad_bit=1, impl=impl)

@@ -1,0 +1,157 @@
+"""Pure-jnp oracles for the arbitrary-precision MatMul (APMM) kernels.
+
+Convention (shared with the Pallas kernels): the GEMM is "NT" --
+
+    Y (M, N) = A (M, K) @ B (N, K)^T
+
+with *both* operands packed along their last (reduction) axis.  A is the
+activation matrix in its natural ``(tokens, features)`` layout (pad bit 0);
+B is the weight matrix in its natural ``(d_out, d_in)`` layout (pad bit 1).
+No operand transpose ever materializes.
+
+Reference implementations, all mathematically identical:
+
+* :func:`apmm_exact`     -- exact int32 matmul on bipolar values (ground
+  truth the kernels must match bit-for-bit).
+* :func:`apmm_bitserial` -- paper-faithful §3.2: n_a * n_b one-bit (+-1)
+  matmuls, then shift-add recovery ``Y = sum 2^{i+j} Y^(ij)``.
+* :func:`apmm_fused`     -- TPU-native operand-level recovery: planes are
+  recombined to int8 *before* a single matmul (distributivity).
+* :func:`apmm_packed_ref` -- packed-layout reference used inside jitted
+  model graphs on CPU and in the 512-device dry-run (same packed buffers
+  and bytes as the Pallas kernel, expressed in plain jnp).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bipolar
+from repro.core.bipolar import BipolarTensor
+
+_NT = (((1,), (1,)), ((), ()))  # contract last dims of both operands
+
+
+def apmm_exact(a_values: jax.Array, b_values: jax.Array) -> jax.Array:
+    """Exact int32 NT matmul of odd-integer bipolar values. A:(M,K) B:(N,K)."""
+    return jax.lax.dot_general(
+        a_values.astype(jnp.int32), b_values.astype(jnp.int32),
+        _NT, preferred_element_type=jnp.int32)
+
+
+def apmm_bitserial(a_values: jax.Array, b_values: jax.Array,
+                   n_a: int, n_b: int) -> jax.Array:
+    """Paper §3.2: decompose -> n_a*n_b one-bit matmuls -> shift-add recover."""
+    ap = bipolar.decompose(a_values, n_a)        # (n_a, M, K) in {0,1}
+    bp = bipolar.decompose(b_values, n_b)        # (n_b, N, K)
+    a_s = (2 * ap.astype(jnp.int8) - 1)          # {-1,+1}
+    b_s = (2 * bp.astype(jnp.int8) - 1)
+    y = jnp.zeros((a_values.shape[0], b_values.shape[0]), jnp.int32)
+    for i in range(n_a):
+        for j in range(n_b):
+            yij = jax.lax.dot_general(a_s[i], b_s[j], _NT,
+                                      preferred_element_type=jnp.int32)
+            y = y + (yij << (i + j))
+    return y
+
+
+def plane_groups(n_bits: int, group: int = 7):
+    """Split ``n_bits`` planes into balanced groups of <= ``group`` bits.
+
+    A group's recombined bipolar value is an odd integer of magnitude
+    <= 2^size - 1, which fits int8 while size <= 7.  Returns
+    ``[(lo, size), ...]``.
+    """
+    n_groups = -(-n_bits // group)
+    base, extra = divmod(n_bits, n_groups)
+    out, lo = [], 0
+    for g in range(n_groups):
+        size = base + (1 if g < extra else 0)
+        out.append((lo, size))
+        lo += size
+    return out
+
+
+def apmm_fused(a_values: jax.Array, b_values: jax.Array,
+               n_a: int, n_b: int) -> jax.Array:
+    """Operand-level recovery (beyond-paper, TPU-native).
+
+    ``(sum_i 2^i A^(i)) (sum_j 2^j B^(j))^T = sum_ij 2^{i+j} A^(i) B^(j)T``
+    -- exact by distributivity -- so for bit-widths <= 7 the whole GEMM is
+    ONE int8 MXU matmul.  Wider operands are split into <=7-bit *plane
+    groups* (``ceil(n/7)`` each): ``ceil(n_a/7) * ceil(n_b/7)`` GEMMs
+    instead of the paper's ``n_a * n_b``.
+    """
+    if n_a <= 7 and n_b <= 7:
+        return jax.lax.dot_general(a_values.astype(jnp.int8),
+                                   b_values.astype(jnp.int8), _NT,
+                                   preferred_element_type=jnp.int32)
+    ga, gb = plane_groups(n_a), plane_groups(n_b)
+    # group value: v_g = (v >> lo) recentered to the group's odd grid:
+    #   v = sum_g 2^lo_g * v_g  with  v_g = ((u >> lo) & (2^size-1)) * 2
+    #                                        - (2^size - 1)
+    ua = bipolar.encode(a_values, n_a)
+    ub = bipolar.encode(b_values, n_b)
+    y = None
+    for lo_a, sz_a in ga:
+        va = (((ua >> lo_a) & ((1 << sz_a) - 1)) << 1) - ((1 << sz_a) - 1)
+        for lo_b, sz_b in gb:
+            vb = (((ub >> lo_b) & ((1 << sz_b) - 1)) << 1) - ((1 << sz_b) - 1)
+            yij = jax.lax.dot_general(va.astype(jnp.int8), vb.astype(jnp.int8),
+                                      _NT, preferred_element_type=jnp.int32)
+            yij = yij << (lo_a + lo_b)
+            y = yij if y is None else y + yij
+    return y
+
+
+def _unpack_values(t: BipolarTensor) -> jax.Array:
+    """Packed tensor -> bipolar integer values with K padded to the word
+    boundary (pad columns decode to +-(2^n - 1) depending on pad bit)."""
+    kp = t.packed.shape[-1] * bipolar.PACK_WIDTH
+    planes = bipolar.unpack_planes(t.packed, -1, kp)
+    return bipolar.recover(planes, t.n_bits)
+
+
+def apmm_packed_ref(a: BipolarTensor, b: BipolarTensor,
+                    fused: bool = True) -> jax.Array:
+    """Packed-layout NT reference: unpack -> matmul -> closed-form pad fix.
+
+    A ``(M, K)`` packed with pad_bit=0, B ``(N, K)`` packed with pad_bit=1:
+    every padded k contributes ``-(2^{n_a}-1)(2^{n_b}-1)`` to each output,
+    removed by adding ``n_pad * (2^{n_a}-1)(2^{n_b}-1)``
+    (:func:`bipolar.pad_correction`).  Returns int32 ``A_int @ B_int^T``.
+    """
+    (m, k), (n, k2) = a.shape, b.shape
+    assert k == k2, (a.shape, b.shape)
+    kp = a.packed.shape[-1] * bipolar.PACK_WIDTH
+    assert b.packed.shape[-1] * bipolar.PACK_WIDTH == kp
+    if fused:
+        y = apmm_fused(_unpack_values(a), _unpack_values(b), a.n_bits, b.n_bits)
+    else:
+        ap = bipolar.unpack_planes(a.packed, -1, kp)
+        bp = bipolar.unpack_planes(b.packed, -1, kp)
+        a_s = 2 * ap.astype(jnp.int8) - 1
+        b_s = 2 * bp.astype(jnp.int8) - 1
+        y = jnp.zeros((m, n), jnp.int32)
+        for i in range(a.n_bits):
+            for j in range(b.n_bits):
+                yij = jax.lax.dot_general(a_s[i], b_s[j], _NT,
+                                          preferred_element_type=jnp.int32)
+                y = y + (yij << (i + j))
+    n_pad = kp - k
+    return y + n_pad * bipolar.max_value(a.n_bits) * bipolar.max_value(b.n_bits)
+
+
+def apmm_dequant_ref(a: BipolarTensor, b: BipolarTensor,
+                     fused: bool = True,
+                     out_dtype=jnp.float32) -> jax.Array:
+    """Full quantized GEMM: int core + scale dequant.
+
+    A scales are per-row ``(M, 1)`` (per token); B scales per-row ``(N, 1)``
+    (per output channel) -- they apply as an outer product after the int
+    matmul.
+    """
+    y = apmm_packed_ref(a, b, fused=fused).astype(jnp.float32)
+    y = y * a.scale.reshape(-1, 1) * b.scale.reshape(1, -1)
+    return y.astype(out_dtype)

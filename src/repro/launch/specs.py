@@ -1,0 +1,96 @@
+"""Input specs for every (architecture x input-shape) cell.
+
+``input_specs(cfg, shape, mode)`` returns ``ShapeDtypeStruct`` stand-ins
+(weak-type-correct, shardable, no device allocation) for AOT lowering;
+``make_batch`` materializes small real batches for CPU smoke tests.
+
+Shape registry (task spec):
+  train_4k     seq 4096,   global_batch 256   -> train_step
+  prefill_32k  seq 32768,  global_batch 32    -> prefill_step
+  decode_32k   seq 32768,  global_batch 128   -> serve_step (1 new token,
+                                                KV cache of seq length)
+  long_500k    seq 524288, global_batch 1     -> serve_step; requires
+                                                sub-quadratic attention
+Modality frontends are STUBS: audio provides precomputed frame
+embeddings, vlm precomputed patch embeddings (+ 3-axis M-RoPE ids).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, mode="train"),
+    "prefill_32k": dict(seq=32768, batch=32, mode="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, mode="decode"),
+    "long_500k": dict(seq=524288, batch=1, mode="decode"),
+}
+
+
+def cell_runnable(cfg: ModelConfig, shape_name: str):
+    """-> (runnable, reason).  long_500k needs sub-quadratic attention."""
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return False, ("full quadratic attention; 500k-token decode "
+                       "requires SSM/hybrid/sliding-window (DESIGN.md §4)")
+    return True, ""
+
+
+def enc_len(cfg: ModelConfig, seq: int) -> int:
+    """Stub audio-encoder frame count for a given decoder length."""
+    return min(max(seq // 8, 64), 4096)
+
+
+def _token_specs(cfg: ModelConfig, batch: int, seq: int, mode: str) -> dict:
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    s = seq if mode != "decode" else 1
+    specs = {"tokens": jax.ShapeDtypeStruct((batch, s), i32)}
+    if mode == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((batch, s), i32)
+    if cfg.family == "vlm":
+        npt = min(cfg.n_patches, s)
+        specs["positions"] = jax.ShapeDtypeStruct((3, batch, s), i32)
+        if mode != "decode":
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (batch, npt, cfg.d_model), dt)
+    if cfg.family == "audio" and mode != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (batch, enc_len(cfg, seq), cfg.frontend_dim), dt)
+    if mode == "decode":
+        specs["positions"] = (
+            jax.ShapeDtypeStruct((3, batch, 1), i32) if cfg.family == "vlm"
+            else jax.ShapeDtypeStruct((batch, 1), i32))
+    return specs
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """AOT-lowering input specs for one shape cell."""
+    sh = SHAPES[shape_name]
+    return _token_specs(cfg, sh["batch"], sh["seq"], sh["mode"])
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, mode: str = "train",
+               seed: int = 0) -> dict:
+    """Materialize a random batch matching the spec (CPU smoke tests)."""
+    rng = np.random.default_rng(seed)
+    specs = _token_specs(cfg, batch, seq, mode)
+    out = {}
+    for k, spec in specs.items():
+        if spec.dtype == jnp.int32:
+            if k == "positions":
+                base = np.arange(spec.shape[-1], dtype=np.int32)
+                out[k] = jnp.broadcast_to(base, spec.shape)
+            else:
+                out[k] = jnp.array(rng.integers(0, cfg.vocab, spec.shape,
+                                                dtype=np.int32))
+        else:
+            out[k] = jnp.array(
+                rng.standard_normal(spec.shape).astype(np.float32) * 0.1
+            ).astype(spec.dtype)
+    return out

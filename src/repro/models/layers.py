@@ -1,0 +1,563 @@
+"""Composable pure-JAX layers: norm, RoPE, GQA attention, MLP, MoE.
+
+Design: functional modules -- ``<layer>_init(key, cfg, ...) -> params`` and
+``<layer>_apply(params, x, ...) -> y`` over plain dict pytrees.  Linear
+weights are stored ``(d_out, d_in)`` ("NT" layout), matching the packed
+APMM kernels, so serving-time quantization is a pure param transform:
+replace the bf16 weight leaf with a :class:`BipolarTensor` and
+``linear_apply`` dispatches to :func:`repro.kernels.ops.ap_linear`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bipolar import BipolarTensor
+from repro.kernels import ops
+from repro.distributed.sharding import constrain
+from repro.models.config import ModelConfig
+
+# attention switches to online-softmax KV chunking above this length
+ATTN_CHUNK_THRESHOLD = 4096
+ATTN_KV_CHUNK = 1024
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear / Embedding
+# ---------------------------------------------------------------------------
+
+def linear_init(key, d_in: int, d_out: int, dtype) -> dict:
+    w = jax.random.normal(key, (d_out, d_in), jnp.float32)
+    return {"w": (w / np.sqrt(d_in)).astype(dtype)}
+
+
+def linear_apply(params: dict, x: jax.Array, *,
+                 quant=None) -> jax.Array:
+    """``y (..., N) = x (..., K) @ W (N, K)^T`` -- bf16 or arbitrary-precision.
+
+    If the weight leaf is a :class:`BipolarTensor` (serving-time quantized
+    params) the GEMM runs through the APMM path with on-the-fly activation
+    quantization (paper §3.2/§4).
+    """
+    w = params["w"]
+    if isinstance(w, BipolarTensor):
+        assert quant is not None and quant.enabled
+        return ops.ap_linear(x, w, a_bits=quant.a_bits,
+                             variant=quant.variant, out_dtype=x.dtype)
+    return jnp.einsum("...k,nk->...n", x, w.astype(x.dtype))
+
+
+def embed_init(key, vocab: int, d_model: int, dtype) -> dict:
+    return {"w": (jax.random.normal(key, (vocab, d_model), jnp.float32)
+                  * 0.02).astype(dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+def norm_init(d: int, cfg: ModelConfig) -> dict:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_apply(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * params["scale"] + params["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard / partial / M-RoPE)
+# ---------------------------------------------------------------------------
+
+def _rope_angles(positions: jax.Array, rot_dim: int, theta: float):
+    """positions (..., S) -> cos/sin (..., S, rot_dim/2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32)
+                           / rot_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, cfg: ModelConfig):
+    """Rotary embedding on ``x (B, S, H, D)``.
+
+    ``positions``: ``(B, S)`` int32, or ``(3, B, S)`` for M-RoPE
+    (temporal/height/width sections, qwen2-vl).  Only the leading
+    ``rope_pct`` fraction of D rotates (stablelm/glm partial rotary).
+    """
+    d = x.shape[-1]
+    rot = int(d * cfg.rope_pct)
+    rot -= rot % 2
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    if cfg.mrope_sections is not None:
+        assert positions.ndim == 3, "M-RoPE needs (3, B, S) positions"
+        sec = cfg.mrope_sections
+        assert sum(sec) == half, (sec, half)
+        cos_parts, sin_parts = [], []
+        lo = 0
+        for axis, width in enumerate(sec):
+            c, s = _rope_angles(positions[axis], rot, cfg.rope_theta)
+            cos_parts.append(c[..., lo:lo + width])
+            sin_parts.append(s[..., lo:lo + width])
+            lo += width
+        cos = jnp.concatenate(cos_parts, -1)[:, :, None, :]
+        sin = jnp.concatenate(sin_parts, -1)[:, :, None, :]
+    else:
+        cos, sin = _rope_angles(positions, rot, cfg.rope_theta)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+    return jnp.concatenate([out, x_pass], axis=-1) if rot < d else out
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal, sliding-window, cross; direct + online-softmax)
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    d, dh = cfg.d_model, cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    return {
+        "wq": linear_init(kq, d, cfg.n_heads * dh, dt),
+        "wk": linear_init(kk, d, cfg.n_kv_heads * dh, dt),
+        "wv": linear_init(kv, d, cfg.n_kv_heads * dh, dt),
+        "wo": linear_init(ko, cfg.n_heads * dh, d, dt),
+    }
+
+
+def _attn_core(q, k, v, q_pos, kv_pos, *, causal: bool,
+               window: Optional[int], chunked: bool,
+               score_bf16: bool = False):
+    """Online-softmax GQA core.
+
+    q: (B, Hkv, Sq, D) with Sq = groups*S folded; k/v: (B, Hkv, T, D);
+    q_pos: (B, Sq) absolute positions; kv_pos: (B, T), negative = invalid.
+    """
+    b, hk, sq, d = q.shape
+    t = k.shape[2]
+    scale = 1.0 / np.sqrt(d)
+    qf = q.astype(jnp.float32) * scale
+
+    def mask_for(kp):  # kp: (B, Tc) -> (B, 1, Sq, Tc) additive mask
+        valid = kp[:, None, None, :] >= 0
+        if causal:
+            valid &= kp[:, None, None, :] <= q_pos[:, None, :, None]
+        if window is not None:
+            valid &= kp[:, None, None, :] > q_pos[:, None, :, None] - window
+        return jnp.where(valid, 0.0, -jnp.inf)
+
+    if not chunked:
+        s = jnp.einsum("bhqd,bhtd->bhqt", qf, k.astype(jnp.float32))
+        s = s + mask_for(kv_pos)
+        m = jnp.max(s, -1, keepdims=True)
+        m = jnp.maximum(m, -1e30)  # fully-masked rows stay finite
+        p = jnp.exp(s - m)
+        o = jnp.einsum("bhqt,bhtd->bhqd", p, v.astype(jnp.float32))
+        return o / jnp.maximum(p.sum(-1, keepdims=True), 1e-20)
+
+    nc = -(-t // ATTN_KV_CHUNK)
+    tc = nc * ATTN_KV_CHUNK
+    pad = tc - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    ks = k.reshape(b, hk, nc, ATTN_KV_CHUNK, d).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(b, hk, nc, ATTN_KV_CHUNK, d).transpose(2, 0, 1, 3, 4)
+    ps = kv_pos.reshape(b, nc, ATTN_KV_CHUNK).transpose(1, 0, 2)
+    # opt-in: pin the chunk axis unsharded so per-step dynamic-slice does
+    # not reshard (see distributed.sharding.default_activation_rules)
+    ks = constrain(ks, "attn_chunks")
+    vs = constrain(vs, "attn_chunks")
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kc, vc, pc = inp
+        s = jnp.einsum("bhqd,bhtd->bhqt", qf, kc.astype(jnp.float32))
+        s = s + mask_for(pc)
+        m_new = jnp.maximum(m, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        if score_bf16:      # halve probability-tensor traffic; m/l stay f32
+            p = p.astype(jnp.bfloat16)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1, keepdims=True).astype(jnp.float32)
+        acc = acc * alpha + jnp.einsum(
+            "bhqt,bhtd->bhqd", p, vc.astype(p.dtype),
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    init = (jnp.full((b, hk, sq, 1), -1e30, jnp.float32),
+            jnp.zeros((b, hk, sq, 1), jnp.float32),
+            jnp.zeros((b, hk, sq, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init, (ks, vs, ps))
+    return acc / jnp.maximum(l, 1e-20)
+
+
+def attention_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
+                    positions: jax.Array,
+                    kv_positions: Optional[jax.Array] = None,
+                    kv_override=None,
+                    cache: Optional[dict] = None,
+                    cross_memory: Optional[jax.Array] = None,
+                    causal: Optional[bool] = None,
+                    quant=None):
+    """GQA attention over ``x (B, S, d_model)``.
+
+    * training / prefill: self-attention over the full sequence.
+    * decode: ``cache`` = dict(k, v, pos, index); x is the new token(s),
+      K/V are appended at ``index`` and attention runs over the cache.
+    * cross: ``cross_memory (B, T, d)`` supplies K/V (enc-dec decoder).
+    Returns ``(out, new_cache)``.
+    """
+    b, s, _ = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // hk
+    causal = cfg.causal if causal is None else causal
+    rope_pos = positions
+    pos2d = positions[positions.ndim - 2] if positions.ndim == 3 else positions
+
+    q = linear_apply(params["wq"], x, quant=quant).reshape(b, s, h, dh)
+    kv_src = x if cross_memory is None else cross_memory
+    t_src = kv_src.shape[1]
+    k = linear_apply(params["wk"], kv_src, quant=quant).reshape(b, t_src, hk, dh)
+    v = linear_apply(params["wv"], kv_src, quant=quant).reshape(b, t_src, hk, dh)
+
+    if cross_memory is None:
+        q = apply_rope(q, rope_pos, cfg)
+        k = apply_rope(k, rope_pos if cache is None else rope_pos, cfg)
+
+    new_cache = None
+    if cache is not None:
+        kv_bits = cfg.kv_bits
+        cache_len = cache["k"].shape[1]
+        if s > cache_len:
+            # SWA prefill longer than the ring: attend over the in-sequence
+            # K/V directly, then store only the last `window` entries
+            # (slot order is irrelevant -- masking is by absolute position).
+            tail_k, tail_v = k[:, -cache_len:], v[:, -cache_len:]
+            tail_p = pos2d[:, -cache_len:].astype(jnp.int32)
+            new_cache = dict(cache, pos=tail_p,
+                             index=jnp.zeros_like(cache["index"]))
+            if kv_bits:
+                new_cache["k"], new_cache["k_scale"] = _quantize_kv(tail_k)
+                new_cache["v"], new_cache["v_scale"] = _quantize_kv(tail_v)
+            else:
+                new_cache["k"] = tail_k.astype(cache["k"].dtype)
+                new_cache["v"] = tail_v.astype(cache["v"].dtype)
+            kv_pos = pos2d
+        else:
+            # write new K/V at per-slot ring positions (continuous batching:
+            # each batch row advances independently)
+            idx = cache["index"]                       # (B,) int32
+
+            def row_write(buf, new, i):
+                start = (i,) + (0,) * (new.ndim - 1)
+                return jax.lax.dynamic_update_slice(buf, new, start)
+
+            wr = jax.vmap(row_write)
+            if kv_bits:
+                k_q, k_s = _quantize_kv(k)
+                v_q, v_s = _quantize_kv(v)
+                ck, cks = wr(cache["k"], k_q, idx), wr(cache["k_scale"], k_s, idx)
+                cv, cvs = wr(cache["v"], v_q, idx), wr(cache["v_scale"], v_s, idx)
+                cpos = wr(cache["pos"], pos2d.astype(jnp.int32), idx)
+                new_cache = dict(cache, k=ck, v=cv, k_scale=cks, v_scale=cvs,
+                                 pos=cpos, index=(idx + s) % cache_len)
+                k = _dequantize_kv(ck, cks, x.dtype)
+                v = _dequantize_kv(cv, cvs, x.dtype)
+                kv_pos = cpos
+            else:
+                ck = wr(cache["k"], k.astype(cache["k"].dtype), idx)
+                cv = wr(cache["v"], v.astype(cache["v"].dtype), idx)
+                cpos = wr(cache["pos"], pos2d.astype(jnp.int32), idx)
+                new_cache = dict(cache, k=ck, v=cv, pos=cpos,
+                                 index=(idx + s) % cache_len)
+                k, v, kv_pos = ck, cv, cpos
+    elif cross_memory is not None:
+        kv_pos = (kv_positions if kv_positions is not None
+                  else jnp.broadcast_to(jnp.arange(t_src), (b, t_src)))
+        causal = False
+    else:
+        kv_pos = pos2d
+
+    # fold the GQA group into the query-sequence axis: (B, Hkv, G*S, D)
+    qg = q.reshape(b, s, hk, g, dh).transpose(0, 2, 3, 1, 4).reshape(
+        b, hk, g * s, dh)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    qp = jnp.repeat(pos2d[:, None, :], g, 1).reshape(b, g * s)
+    # decode (s==1) is a skinny GEMV -- direct; long train/prefill sequences
+    # use the online-softmax KV-chunked path to bound the score transient
+    chunked = (s > 1) and (k.shape[1] > ATTN_CHUNK_THRESHOLD)
+    o = _attn_core(qg, kt, vt, qp, kv_pos, causal=causal,
+                   window=cfg.window, chunked=chunked,
+                   score_bf16=cfg.attn_score_bf16)
+    o = o.reshape(b, hk, g, s, dh).transpose(0, 3, 1, 2, 4).reshape(
+        b, s, h * dh).astype(x.dtype)
+    out = linear_apply(params["wo"], o, quant=quant)
+    return out, new_cache
+
+
+def cross_attention_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
+                          memory: Optional[jax.Array] = None,
+                          cache: Optional[dict] = None,
+                          quant=None):
+    """Enc-dec cross-attention (no RoPE, non-causal).
+
+    Prefill/train: ``memory (B, T, d)`` given -> project K/V (and fill
+    ``cache`` if provided).  Decode: ``memory=None`` -> replay cached
+    projected K/V (the encoder is NOT re-run per token).
+    Returns ``(out, new_cache)``.
+    """
+    b, s, _ = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // hk
+    q = linear_apply(params["wq"], x, quant=quant).reshape(b, s, h, dh)
+    if memory is not None:
+        t = memory.shape[1]
+        k = linear_apply(params["wk"], memory, quant=quant).reshape(
+            b, t, hk, dh)
+        v = linear_apply(params["wv"], memory, quant=quant).reshape(
+            b, t, hk, dh)
+        kv_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+        new_cache = None
+        if cache is not None:
+            new_cache = dict(cache, k=k.astype(cache["k"].dtype),
+                             v=v.astype(cache["v"].dtype), pos=kv_pos)
+    else:
+        assert cache is not None, "cross decode needs a filled cross cache"
+        k, v, kv_pos, new_cache = cache["k"], cache["v"], cache["pos"], cache
+    qg = q.reshape(b, s, hk, g, dh).transpose(0, 2, 3, 1, 4).reshape(
+        b, hk, g * s, dh)
+    qp = jnp.zeros((b, g * s), jnp.int32)   # positions unused (non-causal)
+    chunked = (s > 1) and (k.shape[1] > ATTN_CHUNK_THRESHOLD)
+    o = _attn_core(qg, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+                   qp, kv_pos, causal=False, window=None, chunked=chunked)
+    o = o.reshape(b, hk, g, s, dh).transpose(0, 3, 1, 2, 4).reshape(
+        b, s, h * dh).astype(x.dtype)
+    return linear_apply(params["wo"], o, quant=quant), new_cache
+
+
+def _quantize_kv(x):
+    """bf16 K/V (B,S,H,D) -> int8 codes + per-(token,head) f32 scale."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    return jnp.round(xf / scale).astype(jnp.int8), scale
+
+
+def _dequantize_kv(codes, scale, dtype):
+    return (codes.astype(jnp.float32) * scale).astype(dtype)
+
+
+def make_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    """Decode KV cache; for SWA archs the cache is a ring of ``window``.
+
+    ``index`` is per batch row: under continuous batching each slot
+    advances independently.  With ``cfg.kv_bits=8`` the cache stores int8
+    codes + per-(token,head) scales (halves decode KV traffic).
+    """
+    length = min(max_len, cfg.window) if cfg.window else max_len
+    shape = (batch, length, cfg.n_kv_heads, cfg.head_dim)
+    cache = {
+        "pos": jnp.full((batch, length), -1, jnp.int32),
+        "index": jnp.zeros((batch,), jnp.int32),
+    }
+    if cfg.kv_bits:
+        assert cfg.kv_bits == 8, "int8 is the supported KV format"
+        cache["k"] = jnp.zeros(shape, jnp.int8)
+        cache["v"] = jnp.zeros(shape, jnp.int8)
+        cache["k_scale"] = jnp.zeros(shape[:3] + (1,), jnp.float32)
+        cache["v_scale"] = jnp.zeros(shape[:3] + (1,), jnp.float32)
+    else:
+        cache["k"] = jnp.zeros(shape, dtype)
+        cache["v"] = jnp.zeros(shape, dtype)
+    return cache
+
+
+def make_cross_cache(cfg: ModelConfig, batch: int, enc_len: int,
+                     dtype) -> dict:
+    return {
+        "k": jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.full((batch, enc_len), -1, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    p = {"w_up": linear_init(k1, d, f, dt), "w_down": linear_init(k2, f, d, dt)}
+    if cfg.act == "silu":
+        p["w_gate"] = linear_init(k3, d, f, dt)
+    return p
+
+
+def mlp_apply(params: dict, x: jax.Array, cfg: ModelConfig, quant=None):
+    up = linear_apply(params["w_up"], x, quant=quant)
+    if cfg.act == "silu":
+        gate = linear_apply(params["w_gate"], x, quant=quant)
+        h = jax.nn.silu(gate.astype(jnp.float32)) * up.astype(jnp.float32)
+    else:
+        h = jax.nn.gelu(up.astype(jnp.float32))
+    return linear_apply(params["w_down"], h.astype(x.dtype), quant=quant)
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k routing, capacity dispatch via segment-sum, optional shared)
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.expert_d_ff, cfg.n_experts
+    kr, k1, k2, k3, ks = jax.random.split(key, 5)
+    dt = _dtype(cfg)
+    scale = 1.0 / np.sqrt(d)
+    p = {
+        "router": {"w": (jax.random.normal(kr, (e, d)) * scale
+                         ).astype(jnp.float32)},
+        "w_up": (jax.random.normal(k1, (e, f, d)) * scale).astype(dt),
+        "w_gate": (jax.random.normal(k2, (e, f, d)) * scale).astype(dt),
+        "w_down": (jax.random.normal(k3, (e, d, f)) / np.sqrt(f)).astype(dt),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks, cfg, d_ff=cfg.n_shared_experts * f)
+    return p
+
+
+def _expert_matmul(w, x_eck, quant=None):
+    """Batched per-expert NT GEMM: ``(E, C, K) x (E, N, K) -> (E, C, N)``.
+
+    When ``w`` is a :class:`BipolarTensor` (packed ``(n, E, N, Kw)``, scale
+    ``(E, N, 1)``), the GEMM runs the fused-APMM formulation batched over
+    E: unpack-and-recover weights to bipolar integers in-registers,
+    quantize activations per (e, c) row, integer einsum, closed-form K-pad
+    correction, scale outer product.  Bit-exact with the 2D APMM path.
+    """
+    from repro.core import bipolar as bp
+    if isinstance(w, BipolarTensor):
+        kp = w.packed.shape[-1] * bp.PACK_WIDTH
+        k = w.shape[-1]
+        planes = bp.unpack_planes(w.packed, -1, kp)       # (n, E, N, Kp)
+        vals = bp.recover(planes, w.n_bits)               # pads -> +maxw
+        sx = bp.absmax_scale(x_eck, quant.a_bits, axis=-1)  # (E, C, 1)
+        xq = bp.quantize_values(x_eck, quant.a_bits, sx)    # (E, C, K) int32
+        if kp > k:  # pad activations with -maxa (all-zero-bit convention)
+            xq = jnp.pad(xq, ((0, 0), (0, 0), (0, kp - k)),
+                         constant_values=-bp.max_value(quant.a_bits))
+        y = jnp.einsum("eck,enk->ecn", xq, vals,
+                       preferred_element_type=jnp.int32)
+        y = y + (kp - k) * bp.max_value(quant.a_bits) * bp.max_value(w.n_bits)
+        y = y.astype(jnp.float32) * sx * w.scale[:, None, :, 0]
+        return y.astype(x_eck.dtype)
+    return jnp.einsum("eck,enk->ecn", x_eck, w.astype(x_eck.dtype))
+
+
+MOE_DISPATCH_GROUPS = 32   # static token-group count (per-group capacity)
+
+
+def moe_apply(params: dict, x: jax.Array, cfg: ModelConfig, quant=None):
+    """Top-k capacity-bounded MoE over ``x (B, S, d)``.
+
+    *Grouped* dispatch: tokens are split into G static groups with
+    per-group capacity (= per-device capacity at scale).  The dispatch
+    scatter and the position cumsum are then *batched over G*, which SPMD
+    partitions along the group axis -- the flat global scatter was
+    "involuntarily replicated" by XLA, costing ~1.4 TiB of all-reduce per
+    MoE layer on the jamba-398B train cell (EXPERIMENTS.md §Perf iter 3).
+    Memory is O(G * E * C_g * d) = O(k*T*cf*d); returns ``(y, aux)``.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    # grouping pays when groups are token-heavy (train/prefill); for tiny
+    # decode batches a flat dispatch avoids XLA replicating the expert
+    # weights to satisfy group-sharded operands (EXPERIMENTS.md §Perf A4)
+    if t >= 4096:
+        g = next(gg for gg in (MOE_DISPATCH_GROUPS, 16, 8, 4, 2, 1)
+                 if t % gg == 0)
+    else:
+        g = 1
+    tg = t // g
+    cap = int(np.ceil(k * tg * cfg.capacity_factor / e))
+    xt = x.reshape(t, d)
+    xg = x.reshape(g, tg, d)
+
+    logits = jnp.einsum("gtd,ed->gte", xg.astype(jnp.float32),
+                        params["router"]["w"])
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_e = jax.lax.top_k(probs, k)                     # (G, Tg, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(g, tg * k)                           # (G, Tg*k)
+    oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)             # (G, Tg*k, E)
+    pos = (jnp.cumsum(oh, axis=1) - oh)                         # count before
+    pos = jnp.take_along_axis(pos, flat_e[..., None], 2)[..., 0]
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)         # (G, Tg*k)
+
+    x_rep = jnp.repeat(xg, k, axis=1)                           # (G, Tg*k, d)
+    disp = jax.vmap(
+        lambda xr, sl: jax.ops.segment_sum(xr, sl, num_segments=e * cap + 1)
+    )(x_rep, slot)[:, :e * cap]
+    disp = disp.reshape(g, e, cap, d).astype(x.dtype)
+    disp = constrain(disp, "moe_dispatch")
+    # fold groups into capacity for the expert GEMMs: (E, G*C, d)
+    disp_e = disp.transpose(1, 0, 2, 3).reshape(e, g * cap, d)
+
+    up = _expert_matmul(params["w_up"], disp_e, quant)
+    gate = _expert_matmul(params["w_gate"], disp_e, quant)
+    h = (jax.nn.silu(gate.astype(jnp.float32)) * up.astype(jnp.float32)
+         ).astype(x.dtype)
+    out = _expert_matmul(params["w_down"], h, quant)            # (E, G*C, d)
+
+    out_g = out.reshape(e, g, cap, d).transpose(1, 0, 2, 3)     # (G, E, C, d)
+    if g > 1:
+        # bring expert outputs back token-local BEFORE the combine gather
+        # (all-to-all instead of a model-axis replicating all-gather)
+        out_g = constrain(out_g, "moe_combine")
+    out_flat = jnp.concatenate(
+        [out_g.reshape(g, e * cap, d),
+         jnp.zeros((g, 1, d), out.dtype)], 1)
+    y = jnp.take_along_axis(out_flat, slot[..., None], 1)
+    y = y * (top_p.reshape(g, tg * k)[..., None]
+             * keep[..., None]).astype(out.dtype)
+    y = y.reshape(g, tg, k, d).sum(2).reshape(t, d)
+
+    if "shared" in params:
+        y = y + mlp_apply(params["shared"], xt, cfg, quant=quant)
+
+    # Switch-style load-balance auxiliary loss
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_e[..., 0].reshape(-1), e, dtype=jnp.float32), 0)
+    frac_probs = jnp.mean(probs.reshape(-1, e), 0)
+    aux = e * jnp.sum(frac_tokens * frac_probs) * cfg.router_aux_coef
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,207 @@
+"""Mamba-2 (SSD, state-space duality) mixer in pure JAX.
+
+Chunked SSD algorithm (Dao & Gu, arXiv:2405.21060): the sequence is split
+into chunks of length L; within a chunk the output is an attention-like
+quadratic form with a causal decay mask, across chunks a small recurrent
+state ``(B, H, P, N)`` is carried by a scan.  Decode is the O(1) exact
+recurrence on that state (this is what makes SSM/hybrid archs runnable at
+``long_500k``).
+
+GEMM-shaped projections (in/out) go through ``linear_apply`` and are
+therefore arbitrary-precision-quantizable (paper technique); the selective
+state update itself is not a GEMM and stays bf16/f32 (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import linear_apply, linear_init
+
+
+def ssm_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    h, p, n, g = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_d_state, cfg.ssm_n_groups
+    conv_dim = di + 2 * g * n
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    # in_proj emits [z (di), xBC (di + 2*g*n), dt (h)]
+    return {
+        "in_proj": linear_init(k1, d, 2 * di + 2 * g * n + h, dt),
+        "out_proj": linear_init(k2, di, d, dt),
+        "conv_w": (jax.random.normal(k3, (cfg.ssm_d_conv, conv_dim))
+                   / np.sqrt(cfg.ssm_d_conv)).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(k4, (h,), jnp.float32,
+                                       np.log(1e-3), np.log(1e-1))))),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+    }
+
+
+def _segsum(a):
+    """Causal cumulative sums: out[..., i, j] = sum_{j < k <= i} a[..., k].
+
+    Returns -inf above the diagonal (used as log-decay mask)."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, -1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _ssd_chunked(x, dt, a, b, c, chunk: int):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P) input (already dt-scaled outside? no -- raw), dt: (B, S, H)
+    softplus'd step, a: (H,) negative decay rates, b/c: (B, S, G, N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    l = chunk
+    assert s % l == 0, (s, l)
+    nc = s // l
+    rep = h // g
+
+    xd = (x * dt[..., None]).astype(jnp.float32)       # input scaling
+    adt = (a[None, None, :] * dt).astype(jnp.float32)  # (B, S, H) log decay
+    # reshape to chunks
+    xc = xd.reshape(bsz, nc, l, h, p)
+    ac = adt.reshape(bsz, nc, l, h)
+    bc_ = b.reshape(bsz, nc, l, g, n).astype(jnp.float32)
+    cc = c.reshape(bsz, nc, l, g, n).astype(jnp.float32)
+    bh = jnp.repeat(bc_, rep, axis=3)                  # broadcast groups->heads
+    ch = jnp.repeat(cc, rep, axis=3)
+
+    # --- intra-chunk (quadratic, attention-like) ---
+    lmat = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))  # (B,nc,H,L,L)
+    scores = jnp.einsum("bclhn,bcshn->bchls", ch, bh)  # (B,nc,H,L,L)
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", scores * lmat, xc)
+
+    # --- chunk states ---
+    a_cum = jnp.cumsum(ac, axis=2)                     # (B,nc,L,H)
+    a_tot = a_cum[:, :, -1, :]                         # (B,nc,H)
+    decay_states = jnp.exp(a_tot[:, :, None, :] - a_cum)  # (B,nc,L,H)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn", bh, decay_states, xc)
+
+    # --- inter-chunk recurrence with STREAMED off-diagonal outputs ---
+    # (computing y_off inside the scan avoids stacking all (B,nc,H,P,N)
+    # chunk states -- that stash dominated the jamba-398B memory roofline,
+    # EXPERIMENTS.md §Perf iter 4)
+    state_decay = jnp.exp(a_cum)                        # (B,nc,L,H)
+
+    def step(h_prev, inp):
+        st, atot, ch_c, sdec_c = inp     # (B,H,P,N) (B,H) (B,L,H,N) (B,L,H)
+        y_off_c = jnp.einsum("blhn,bhpn,blh->blhp", ch_c, h_prev, sdec_c)
+        h_new = h_prev * jnp.exp(atot)[:, :, None, None] + st
+        return h_new, y_off_c
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final, y_off = jax.lax.scan(
+        step, init, (states.transpose(1, 0, 2, 3, 4),
+                     a_tot.transpose(1, 0, 2),
+                     ch.transpose(1, 0, 2, 3, 4),
+                     state_decay.transpose(1, 0, 2, 3)))
+    y_off = y_off.transpose(1, 0, 2, 3, 4)              # (B,nc,L,H,P)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, final
+
+
+def ssm_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
+              cache: Optional[dict] = None, quant=None):
+    """Mamba-2 mixer over ``x (B, S, d_model)``.
+
+    With ``cache`` (decode): S must be 1; the conv buffer and SSD state are
+    updated in O(1).  Returns ``(y, new_cache)``.
+    """
+    bsz, s, _ = x.shape
+    di = cfg.ssm_d_inner
+    h, p, n, g = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_d_state, cfg.ssm_n_groups
+    conv_dim = di + 2 * g * n
+
+    zxbcdt = linear_apply(params["in_proj"], x, quant=quant)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, di + conv_dim], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])           # (B,S,H)
+    a = -jnp.exp(params["A_log"])                       # (H,) negative
+
+    new_cache = None
+    if cache is None or s > 1:
+        # causal depthwise conv along S (window d_conv)
+        pad = cfg.ssm_d_conv - 1
+        xbc_p = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))
+        windows = jnp.stack(
+            [xbc_p[:, i:i + s, :] for i in range(cfg.ssm_d_conv)], axis=2)
+        xbc_c = jnp.einsum("bswc,wc->bsc", windows.astype(jnp.float32),
+                           params["conv_w"].astype(jnp.float32))
+        xbc_c = jax.nn.silu(xbc_c + params["conv_b"].astype(jnp.float32))
+        xs, b, c = jnp.split(xbc_c, [di, di + g * n], axis=-1)
+        xh = xs.reshape(bsz, s, h, p)
+        bh = b.reshape(bsz, s, g, n)
+        ch = c.reshape(bsz, s, g, n)
+        pad_s = (-s) % cfg.ssm_chunk
+        if pad_s:
+            xh = jnp.pad(xh, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad_s), (0, 0)))
+            bh = jnp.pad(bh, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+            ch = jnp.pad(ch, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        y, state = _ssd_chunked(xh, dt, a, bh, ch, cfg.ssm_chunk)
+        # D skip connection on the conv'd input
+        y = y[:, :s] + (params["D"][None, None, :, None]
+                        * xh[:, :s].astype(jnp.float32))
+        if cache is not None:
+            # prefill: fill the decode cache (conv tail = last raw xBC rows)
+            pad_c = cfg.ssm_d_conv - 1
+            tail = jnp.pad(xbc, ((0, 0), (pad_c, 0), (0, 0)))[:, s:s + pad_c]
+            new_cache = dict(cache, conv=tail.astype(cache["conv"].dtype),
+                             state=state)
+    else:
+        assert s == 1
+        # update conv ring buffer: (B, d_conv-1, conv_dim) holds last inputs
+        conv_buf = cache["conv"]
+        window = jnp.concatenate([conv_buf, xbc.astype(conv_buf.dtype)], 1)
+        xbc_c = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                           params["conv_w"].astype(jnp.float32))
+        xbc_c = jax.nn.silu(xbc_c + params["conv_b"].astype(jnp.float32))
+        xs, b, c = jnp.split(xbc_c, [di, di + g * n], axis=-1)
+        xh = xs.reshape(bsz, h, p)
+        bh = jnp.repeat(b.reshape(bsz, g, n), h // g, axis=1)
+        ch = jnp.repeat(c.reshape(bsz, g, n), h // g, axis=1)
+        dt1 = dt[:, 0, :]                               # (B,H)
+        decay = jnp.exp(a[None, :] * dt1)               # (B,H)
+        ssd_state = cache["state"]                      # (B,H,P,N) f32
+        upd = jnp.einsum("bhp,bhn->bhpn", xh * dt1[..., None], bh)
+        state = ssd_state * decay[:, :, None, None] + upd
+        y1 = jnp.einsum("bhpn,bhn->bhp", state, ch)
+        y1 = y1 + params["D"][None, :, None] * xh
+        y = y1[:, None, :, :]                           # (B,1,H,P)
+        new_cache = dict(cache, conv=window[:, 1:], state=state)
+
+    y = y.reshape(bsz, s, di)
+    # gated RMSNorm (mamba2's norm-before-out-proj)
+    yz = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(yz), -1, keepdims=True)
+    yz = yz * jax.lax.rsqrt(ms + 1e-5) * params["norm_scale"]
+    out = linear_apply(params["out_proj"], yz.astype(x.dtype), quant=quant)
+    if cache is None:
+        return out, None
+    return out, new_cache
+
+
+def make_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    conv_dim = cfg.ssm_d_inner + 2 * cfg.ssm_n_groups * cfg.ssm_d_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_d_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_n_heads, cfg.ssm_head_dim,
+                            cfg.ssm_d_state), jnp.float32),
+    }

@@ -1,0 +1,184 @@
+"""Serving runtime: prefill/decode steps and a continuous-batching engine.
+
+The jitted steps are the units the dry-run lowers (``serve_step`` = one new
+token against a KV cache of the cell's sequence length).  The engine wraps
+them with slot-based continuous batching: a fixed decode batch of ``B``
+slots, each slot independently holding one request's KV state; finished
+slots are refilled from the queue without stopping the other slots
+(per-slot cache write indices -- see ``make_kv_cache``).
+
+Serving uses quantized packed weights (the paper's technique); pass
+``quant=cfg.quant`` after :func:`repro.models.model.quantize_params`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ModelConfig, QuantConfig
+
+
+# ---------------------------------------------------------------------------
+# Jitted steps
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg", "quant"))
+def prefill_step(params, batch: dict, caches, cfg: ModelConfig,
+                 quant: Optional[QuantConfig] = None):
+    """Process a full prompt, filling the caches.
+
+    Returns ``(last_logits (B, V), caches)``.
+    """
+    logits, caches, _ = M.forward(
+        params, batch["tokens"], cfg,
+        positions=batch.get("positions"),
+        patch_embeds=batch.get("patch_embeds"),
+        frames=batch.get("frames"),
+        caches=caches, quant=quant, remat=False, logits_mode="last")
+    return logits, caches
+
+
+@partial(jax.jit, static_argnames=("cfg", "quant"))
+def serve_step(params, batch: dict, caches, cfg: ModelConfig,
+               quant: Optional[QuantConfig] = None):
+    """One decode step: one new token per sequence against the caches.
+
+    ``batch``: tokens (B, 1), positions (B, 1) (or (3, B, 1) M-RoPE).
+    Returns ``(logits (B, V), caches)``.
+    """
+    logits, caches, _ = M.forward(
+        params, batch["tokens"], cfg,
+        positions=batch["positions"],
+        caches=caches, quant=quant, remat=False, logits_mode="last")
+    return logits, caches
+
+
+def sample(logits: jax.Array, *, temperature: float = 0.0,
+           key=None) -> jax.Array:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray              # (s,) int32
+    max_new_tokens: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _tree_write_slot(batched, single, slot: int):
+    """Insert a B=1 cache/state tree into batch position ``slot``.
+
+    The batch dim is 0 for prelude caches but 1 for scanned-stack caches
+    (leaves carry a leading n_units dim)."""
+    def wr_at(bdim):
+        def wr(b, s):
+            start = (0,) * bdim + (slot,) + (0,) * (b.ndim - bdim - 1)
+            return jax.lax.dynamic_update_slice(b, s.astype(b.dtype), start)
+        return wr
+
+    out = dict(batched)
+    for key in batched:
+        bdim = 0 if key == "prelude" else 1
+        out[key] = jax.tree.map(wr_at(bdim), batched[key], single[key])
+    return out
+
+
+class Engine:
+    """Slot-based continuous batching over the jitted steps.
+
+    Each of the ``n_slots`` decode lanes owns one request at a time.
+    Prefill runs per-request at B=1 (bucketed to ``prefill_len``) and the
+    resulting KV state is scattered into the lane's slice of the batched
+    cache; decode advances all active lanes in lock-step.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
+                 max_len: int = 256, quant: Optional[QuantConfig] = None):
+        self.params, self.cfg, self.quant = params, cfg, quant
+        self.n_slots, self.max_len = n_slots, max_len
+        self.caches = M.init_caches(cfg, n_slots, max_len)
+        self.slot_req: list[Optional[Request]] = [None] * n_slots
+        self.lengths = np.zeros(n_slots, np.int32)     # tokens seen per slot
+        self.last_tok = np.zeros(n_slots, np.int32)    # next input token
+        self.queue: list[Request] = []
+        self.steps = 0
+
+    # -- request lifecycle -------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self._prefill_into(req, slot)
+                self.slot_req[slot] = req
+
+    def _prefill_into(self, req: Request, slot: int):
+        s = len(req.prompt)
+        one = M.init_caches(self.cfg, 1, self.max_len)
+        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
+        if self.cfg.family == "vlm":
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32), (3, 1, s))
+            batch["patch_embeds"] = jnp.zeros(
+                (1, min(self.cfg.n_patches, s), self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype))
+        if self.cfg.family == "audio":
+            from repro.launch.specs import enc_len
+            batch["frames"] = jnp.zeros(
+                (1, enc_len(self.cfg, s), self.cfg.frontend_dim),
+                jnp.dtype(self.cfg.dtype))
+        logits, one = prefill_step(self.params, batch, one, self.cfg,
+                                   self.quant)
+        self.caches = _tree_write_slot(self.caches, one, slot)
+        self.lengths[slot] = s
+        self.last_tok[slot] = int(np.argmax(np.asarray(logits[0])))
+        req.out.append(int(self.last_tok[slot]))
+
+    # -- decode loop --------------------------------------------------------
+    def step(self):
+        """One batched decode step across all active slots."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return False
+        toks = jnp.asarray(self.last_tok, jnp.int32)[:, None]
+        pos = jnp.asarray(self.lengths, jnp.int32)[:, None]
+        if self.cfg.family == "vlm":
+            pos = jnp.broadcast_to(pos[None], (3, self.n_slots, 1))
+        batch = {"tokens": toks, "positions": pos}
+        logits, self.caches = serve_step(self.params, batch, self.caches,
+                                         self.cfg, self.quant)
+        nxt = np.array(sample(logits))  # writable copy
+        self.steps += 1
+        for slot in active:
+            req = self.slot_req[slot]
+            req.out.append(int(nxt[slot]))
+            self.lengths[slot] += 1
+            if len(req.out) >= req.max_new_tokens \
+                    or self.lengths[slot] >= self.max_len - 1:
+                req.done = True
+                self.slot_req[slot] = None
+        self.last_tok = nxt
+        return True
+
+    def run(self, max_steps: int = 10_000):
+        while (self.queue or any(r is not None for r in self.slot_req)) \
+                and self.steps < max_steps:
+            if not self.step():
+                break

@@ -1,0 +1,122 @@
+"""APMM Pallas kernel vs pure-jnp oracle: shape/dtype/bit-width sweeps.
+
+All Pallas kernels execute under ``interpret=True`` (kernel body run in
+Python on CPU); the oracle is :mod:`repro.kernels.ref`, itself validated
+bit-exactly against plain integer matmul in test_bipolar.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bipolar
+from repro.kernels import ops, pack, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(m, k, dtype=np.float32, scale=2.0):
+    return (RNG.standard_normal((m, k)) * scale).astype(dtype)
+
+
+def _quant_pair(m, n, k, n_a, n_b):
+    a = jnp.array(_rand(m, k))
+    b = jnp.array(_rand(n, k))
+    at = ops.quantize_rows(a, n_a, pad_bit=0, impl="reference")
+    bt = ops.quantize_rows(b, n_b, pad_bit=1, impl="reference")
+    return at, bt
+
+
+# --- full sweep: shapes x bits x variants, bit-exact int32 ----------------
+
+SHAPES = [
+    (8, 16, 32),       # single tile, word-aligned
+    (8, 16, 70),       # K not a multiple of 32 -> pad correction
+    (130, 257, 100),   # nothing aligned
+    (256, 256, 512),   # exactly the default tile
+    (300, 130, 1100),  # multi-tile in every dim with remainders
+]
+BIT_PAIRS = [(1, 1), (1, 2), (2, 2), (3, 4), (4, 4), (7, 7), (8, 3), (8, 8)]
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=[str(s) for s in SHAPES])
+@pytest.mark.parametrize("bits", BIT_PAIRS, ids=[f"W{b}A{a}" for a, b in BIT_PAIRS])
+@pytest.mark.parametrize("variant", ["fused", "bitserial"])
+def test_kernel_matches_oracle_int(shape, bits, variant):
+    m, n, k = shape
+    n_a, n_b = bits
+    at, bt = _quant_pair(m, n, k, n_a, n_b)
+    y_ref = np.asarray(ops.ap_matmul(at, bt, raw=True, impl="reference"))
+    y_ker = np.asarray(ops.ap_matmul(at, bt, raw=True, impl="interpret",
+                                     variant=variant))
+    np.testing.assert_array_equal(y_ker, y_ref)
+
+
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_dequant_matches_oracle(out_dtype):
+    at, bt = _quant_pair(64, 48, 130, 2, 3)
+    y_ref = np.asarray(ops.ap_matmul(at, bt, impl="reference",
+                                     out_dtype=out_dtype)).astype(np.float32)
+    y_ker = np.asarray(ops.ap_matmul(at, bt, impl="interpret",
+                                     out_dtype=out_dtype)).astype(np.float32)
+    np.testing.assert_allclose(y_ker, y_ref, rtol=1e-2, atol=1e-2)
+
+
+@given(m=st.integers(1, 70), n=st.integers(1, 70), k=st.integers(1, 200),
+       n_a=st.integers(1, 4), n_b=st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_kernel_property_sweep(m, n, k, n_a, n_b):
+    at, bt = _quant_pair(m, n, k, n_a, n_b)
+    y_ref = np.asarray(ops.ap_matmul(at, bt, raw=True, impl="reference"))
+    y_ker = np.asarray(ops.ap_matmul(at, bt, raw=True, impl="interpret"))
+    np.testing.assert_array_equal(y_ker, y_ref)
+
+
+# --- pack kernel ----------------------------------------------------------
+
+@pytest.mark.parametrize("n_bits", [1, 2, 3, 4, 7])
+@pytest.mark.parametrize("rk", [(8, 32), (100, 70), (256, 1024), (33, 96)])
+def test_pack_kernel_matches_reference(n_bits, rk):
+    r, k = rk
+    x = jnp.array(_rand(r, k))
+    t_ref = ops.quantize_rows(x, n_bits, pad_bit=0, impl="reference")
+    t_ker = ops.quantize_rows(x, n_bits, pad_bit=0, impl="interpret")
+    np.testing.assert_array_equal(np.asarray(t_ker.packed),
+                                  np.asarray(t_ref.packed))
+    np.testing.assert_allclose(np.asarray(t_ker.scale),
+                               np.asarray(t_ref.scale))
+
+
+def test_pack_kernel_weight_pad_bit():
+    """Weight padding must be all-one bits (pad value +scale*maxv)."""
+    x = jnp.array(_rand(4, 40))  # 40 -> padded to 64: 24 pad bits
+    t_ref = ops.quantize_rows(x, 3, pad_bit=1, impl="reference")
+    t_ker = ops.quantize_rows(x, 3, pad_bit=1, impl="interpret")
+    np.testing.assert_array_equal(np.asarray(t_ker.packed),
+                                  np.asarray(t_ref.packed))
+
+
+# --- end-to-end linear ----------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["reference", "interpret"])
+@pytest.mark.parametrize("w_bits,tol", [(4, 0.20), (8, 0.02)])
+def test_ap_linear_close_to_float(impl, w_bits, tol):
+    """Quantized linear tracks the float matmul within the bit-width's
+    quantization error (absmax W4 step is ~13% of range; W8 ~0.8%)."""
+    x = jnp.array(_rand(5, 7 * 64).reshape(5, 7, 64) / 4)
+    w = jnp.array(_rand(32, 64) / 8)
+    wt = ops.pack_weight(w, w_bits, impl="reference")
+    y_q = np.asarray(ops.ap_linear(x, wt, a_bits=8, impl=impl))
+    y_f = np.asarray(x) @ np.asarray(w).T
+    rel = np.abs(y_q - y_f).mean() / (np.abs(y_f).mean() + 1e-9)
+    assert rel < tol, rel
+    assert y_q.shape == (5, 7, 32)
+
+
+def test_ap_linear_batched_shapes():
+    x = jnp.array(_rand(2, 3 * 96).reshape(2, 3, 96))
+    wt = ops.pack_weight(jnp.array(_rand(17, 96)), 2, impl="reference")
+    y = ops.ap_linear(x, wt, a_bits=4, impl="reference")
+    assert y.shape == (2, 3, 17)
+    assert not np.any(np.isnan(np.asarray(y)))

@@ -1,0 +1,79 @@
+"""Flash-attention Pallas kernel vs the jnp online-softmax oracle
+(`layers._attn_core`), swept over shapes, masks, and windows."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.models import layers as L
+
+RNG = np.random.default_rng(0)
+
+
+def _mk(bh, sq, t, d, dtype=jnp.float32):
+    q = jnp.asarray(RNG.standard_normal((bh, sq, d)), dtype)
+    k = jnp.asarray(RNG.standard_normal((bh, t, d)), dtype)
+    v = jnp.asarray(RNG.standard_normal((bh, t, d)), dtype)
+    return q, k, v
+
+
+def _ref(q, k, v, q_pos, kv_pos, causal, window):
+    # the direct-path jnp core (b=BH, hk=1 view)
+    o = L._attn_core(q[:, None], k[:, None], v[:, None],
+                     q_pos, kv_pos, causal=causal, window=window,
+                     chunked=False)
+    return np.asarray(o[:, 0], dtype=np.float32)
+
+
+@pytest.mark.parametrize("shape", [(2, 8, 8, 16), (3, 64, 128, 32),
+                                   (1, 128, 512, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_reference(shape, causal):
+    bh, sq, t, d = shape
+    q, k, v = _mk(bh, sq, t, d)
+    q_pos = jnp.broadcast_to(jnp.arange(t - sq, t, dtype=jnp.int32),
+                             (bh, sq))
+    kv_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (bh, t))
+    got = np.asarray(flash_attention(
+        q, k, v, q_pos, kv_pos, causal=causal,
+        block=(32, 64), interpret=True), dtype=np.float32)
+    want = _ref(q, k, v, q_pos, kv_pos, causal, None)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_sliding_window():
+    bh, sq, t, d, w = 2, 32, 32, 16, 8
+    q, k, v = _mk(bh, sq, t, d)
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (bh, t))
+    got = np.asarray(flash_attention(
+        q, k, v, pos, pos, causal=True, window=w,
+        block=(16, 16), interpret=True), dtype=np.float32)
+    want = _ref(q, k, v, pos, pos, True, w)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_invalid_slots_masked():
+    """Negative kv positions (empty cache slots) must not contribute."""
+    bh, sq, t, d = 1, 16, 64, 16
+    q, k, v = _mk(bh, sq, t, d)
+    kv_pos = jnp.where(jnp.arange(t) < 40, jnp.arange(t), -1)[None, :]
+    kv_pos = jnp.broadcast_to(kv_pos, (bh, t)).astype(jnp.int32)
+    q_pos = jnp.broadcast_to(jnp.arange(24, 40, dtype=jnp.int32), (bh, sq))
+    got = np.asarray(flash_attention(
+        q, k, v, q_pos, kv_pos, causal=True, block=(16, 16),
+        interpret=True), dtype=np.float32)
+    want = _ref(q, k, v, q_pos, kv_pos, True, None)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_bf16_inputs():
+    bh, sq, t, d = 2, 64, 64, 32
+    q, k, v = _mk(bh, sq, t, d, jnp.bfloat16)
+    pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (bh, t))
+    got = np.asarray(flash_attention(q, k, v, pos, pos, causal=True,
+                                     block=(32, 32), interpret=True),
+                     dtype=np.float32)
+    want = _ref(q, k, v, pos, pos, True, None)
+    np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)

@@ -1,0 +1,129 @@
+"""Property tests for the bipolar-INT format (paper §3.1) and packing (§4.1)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bipolar
+from repro.kernels import ref
+
+BITS = st.integers(min_value=1, max_value=8)
+
+
+def odd_values(n_bits: int, shape, rng):
+    m = bipolar.max_value(n_bits)
+    return rng.choice(np.arange(-m, m + 1, 2), size=shape).astype(np.int32)
+
+
+@given(n=BITS)
+@settings(max_examples=8, deadline=None)
+def test_representable_set_is_symmetric_odd(n):
+    """Bipolar-INT represents exactly the 2^n odd ints in [-(2^n-1), 2^n-1]."""
+    vals = np.arange(-(2**n - 1), 2**n, 2)
+    assert len(vals) == 2**n
+    assert np.array_equal(vals, -vals[::-1])            # symmetric range
+    u = np.asarray(bipolar.encode(jnp.array(vals), n))
+    assert u.min() == 0 and u.max() == 2**n - 1         # dense bit field
+    back = np.asarray(bipolar.decode(jnp.array(u), n))
+    assert np.array_equal(back, vals)
+
+
+@given(n=BITS, seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_decompose_recover_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    v = odd_values(n, (5, 7), rng)
+    planes = bipolar.decompose(jnp.array(v), n)
+    assert planes.shape == (n, 5, 7)
+    assert set(np.unique(np.asarray(planes))) <= {0, 1}
+    rec = np.asarray(bipolar.recover(planes, n))
+    assert np.array_equal(rec, v)
+
+
+@given(n=BITS, seed=st.integers(0, 2**31 - 1),
+       k=st.integers(1, 130))
+@settings(max_examples=10, deadline=None)
+def test_pack_unpack_roundtrip_any_k(n, seed, k):
+    """§4.1 packing is lossless for any reduction length (incl. padding)."""
+    rng = np.random.default_rng(seed)
+    v = odd_values(n, (3, k), rng)
+    planes = bipolar.decompose(jnp.array(v), n)
+    padded = bipolar.pad_for_packing(planes, 1, pad_bit=1)
+    packed = bipolar.pack_planes(padded, 1)
+    assert packed.dtype == jnp.uint32
+    assert packed.shape == (n, 3, bipolar.packed_words(k))
+    unpacked = bipolar.unpack_planes(packed, 1, k)
+    assert np.array_equal(np.asarray(unpacked), np.asarray(planes))
+
+
+@given(n=BITS)
+@settings(max_examples=8, deadline=None)
+def test_packed_memory_is_exactly_n_bits_per_element(n):
+    """The §4.1 layout stores an n-bit matrix in exactly n bits/element
+    (modulo the 32-element word rounding) -- no 4/8-bit container waste."""
+    m, k = 16, 256
+    x = np.random.default_rng(0).standard_normal((m, k)).astype(np.float32)
+    t = bipolar.quantize_pack(jnp.array(x), n, pack_axis=1, scale_axis=1)
+    plane_bytes = int(np.prod(t.packed.shape)) * 4
+    assert plane_bytes == n * m * k // 8
+    # vs bf16 dense: 16/n compression on the matrix body
+    assert t.nbytes_dense_bf16 / plane_bytes == 16 / n
+
+
+@given(nw=st.integers(1, 7), nx=st.integers(1, 7),
+       seed=st.integers(0, 2**31 - 1),
+       k=st.integers(1, 100))
+@settings(max_examples=12, deadline=None)
+def test_apmm_formulations_bit_identical(nw, nx, seed, k):
+    """exact == bit-serial (§3.2) == fused operand-recovery (NT layout)."""
+    rng = np.random.default_rng(seed)
+    aq = jnp.array(odd_values(nw, (6, k), rng))     # A (M, K)
+    bq = jnp.array(odd_values(nx, (5, k), rng))     # B (N, K)
+    y0 = np.asarray(ref.apmm_exact(aq, bq))
+    assert np.array_equal(np.asarray(ref.apmm_bitserial(aq, bq, nw, nx)), y0)
+    assert np.array_equal(np.asarray(ref.apmm_fused(aq, bq, nw, nx)), y0)
+
+
+@given(nw=st.integers(1, 6), nx=st.integers(1, 6),
+       seed=st.integers(0, 2**31 - 1), k=st.integers(1, 96))
+@settings(max_examples=10, deadline=None)
+def test_apmm_packed_matches_exact(nw, nx, seed, k):
+    """Packed §4.1 layout reproduces the exact integer product (NT)."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((8, k)).astype(np.float32)   # activations (M,K)
+    b = rng.standard_normal((6, k)).astype(np.float32)   # weights (N,K)
+    sa = bipolar.absmax_scale(jnp.array(a), nx, axis=1)
+    sb = bipolar.absmax_scale(jnp.array(b), nw, axis=1)
+    aq = bipolar.quantize_values(jnp.array(a), nx, sa)
+    bq = bipolar.quantize_values(jnp.array(b), nw, sb)
+    y0 = np.asarray(ref.apmm_exact(aq, bq))
+    at = bipolar.quantize_pack(jnp.array(a), nx, pack_axis=-1,
+                               scale_axis=-1, pad_bit=0)
+    bt = bipolar.quantize_pack(jnp.array(b), nw, pack_axis=-1,
+                               scale_axis=-1, pad_bit=1)
+    for fused in (True, False):
+        y = np.asarray(ref.apmm_packed_ref(at, bt, fused=fused))
+        assert np.array_equal(y, y0), (nw, nx, fused)
+
+
+def test_binary_case_needs_no_correction_matrix():
+    """1-bit bipolar W/X multiply exactly with a single 1-bit matmul --
+    the APNN-TC J-matrix correction (paper §3.1) is unnecessary."""
+    rng = np.random.default_rng(3)
+    a = jnp.array(rng.choice([-1, 1], size=(8, 32)).astype(np.int32))
+    b = jnp.array(rng.choice([-1, 1], size=(4, 32)).astype(np.int32))
+    y = ref.apmm_bitserial(a, b, 1, 1)
+    assert np.array_equal(np.asarray(y), np.asarray(a) @ np.asarray(b).T)
+
+
+@given(n=st.integers(2, 8), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_quantize_error_bound(n, seed):
+    """Symmetric absmax bipolar quantization error <= scale (odd-grid step 2)."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((64,)).astype(np.float32) * 3.0
+    s = bipolar.absmax_scale(jnp.array(x), n)
+    q = bipolar.quantize_values(jnp.array(x), n, s)
+    err = np.abs(np.asarray(q) * np.asarray(s) - x)
+    assert err.max() <= float(np.asarray(s).squeeze()) * 1.0001

@@ -1,0 +1,103 @@
+"""The loop-aware HLO analyzer must fix cost_analysis's while-body
+undercounting (it visits scan bodies once)."""
+
+import sys
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks import hlo_analysis as H  # noqa: E402
+
+
+def _compiled(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile()
+
+
+def test_scan_flops_are_trip_weighted():
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    def f_scan(x, ws):
+        return jax.lax.scan(body, x, ws)[0]
+
+    def f_unroll(x, ws):
+        for i in range(8):
+            x, _ = body(x, ws[i])
+        return x
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.bfloat16)
+    ws = jax.ShapeDtypeStruct((8, 64, 64), jnp.bfloat16)
+    a_scan = H.analyze(_compiled(f_scan, x, ws).as_text())
+    a_unroll = H.analyze(_compiled(f_unroll, x, ws).as_text())
+    expect = 8 * 2 * 64 * 64 * 64
+    assert a_scan["dot_flops"] == expect, a_scan
+    assert a_unroll["dot_flops"] == expect
+    assert a_scan["while_trips"] and 8 in a_scan["while_trips"].values()
+    # cost_analysis undercounts the scan by ~8x (the bug we're fixing)
+    ca = _compiled(f_scan, x, ws).cost_analysis()["flops"]
+    assert ca < expect / 4
+
+
+def test_nested_scan_trip_product():
+    def inner(c, _):
+        return jnp.tanh(c @ c), None
+
+    def outer(c, _):
+        c, _ = jax.lax.scan(inner, c, None, length=3)
+        return c, None
+
+    def f(x):
+        return jax.lax.scan(outer, x, None, length=5)[0]
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    a = H.analyze(_compiled(f, x).as_text())
+    assert a["dot_flops"] == 5 * 3 * 2 * 32 ** 3, a
+
+
+def test_collective_bytes_counted():
+    import subprocess
+    script = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, jax, jax.numpy as jnp
+sys.path.insert(0, %r)
+from benchmarks import hlo_analysis as H
+from jax.sharding import NamedSharding, PartitionSpec as P
+mesh = jax.make_mesh((8,), ("data",))
+xs = NamedSharding(mesh, P("data", None))
+def f(x):
+    return jnp.sum(x * 2.0)
+c = jax.jit(f, in_shardings=(xs,),
+            out_shardings=NamedSharding(mesh, P())).lower(
+    jax.ShapeDtypeStruct((64, 128), jnp.float32)).compile()
+a = H.analyze(c.as_text())
+assert a.get("collective_bytes", 0) > 0, a
+assert "all-reduce" in a["collectives"], a
+print("OK")
+""" % os.path.join(os.path.dirname(__file__), "..")
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=300,
+                       env={**os.environ,
+                            "PYTHONPATH": os.environ.get("PYTHONPATH", "")})
+    assert r.returncode == 0, r.stderr
+    assert "OK" in r.stdout
+
+
+def test_bytes_grow_with_trip_count():
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.bfloat16)
+    for n in (4, 16):
+        ws = jax.ShapeDtypeStruct((n, 64, 64), jnp.bfloat16)
+        a = H.analyze(_compiled(
+            lambda x, ws: jax.lax.scan(body, x, ws)[0], x, ws).as_text())
+        if n == 4:
+            b4 = a["bytes"]
+        else:
+            b16 = a["bytes"]
+    assert b16 > 2.5 * b4, (b4, b16)

@@ -1,0 +1,82 @@
+"""Per-architecture smoke tests: reduced config, one forward + train step
+on CPU, asserting output shapes and no NaNs (task spec deliverable f)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.launch.specs import make_batch
+from repro.models import model as M
+from repro.models.config import QuantConfig
+
+SEQ, BATCH = 32, 2
+
+
+@pytest.fixture(scope="module", params=ARCHS)
+def arch_setup(request):
+    cfg = get_config(request.param).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_forward_shapes_and_finite(arch_setup):
+    cfg, params = arch_setup
+    batch = make_batch(cfg, BATCH, SEQ, "train")
+    x, _, aux = M.forward(params, batch["tokens"], cfg,
+                          positions=batch.get("positions"),
+                          patch_embeds=batch.get("patch_embeds"),
+                          frames=batch.get("frames"))
+    assert x.shape == (BATCH, SEQ, cfg.d_model)
+    assert np.all(np.isfinite(np.asarray(x, dtype=np.float32))), cfg.name
+    assert np.isfinite(float(aux))
+
+
+def test_train_step_loss_and_grads_finite(arch_setup):
+    cfg, params = arch_setup
+    batch = make_batch(cfg, BATCH, SEQ, "train")
+
+    @jax.jit
+    def step(p):
+        return jax.value_and_grad(lambda q: M.loss_fn(q, batch, cfg))(p)
+
+    loss, grads = step(params)
+    assert np.isfinite(float(loss)), cfg.name
+    # loss should be near ln(vocab) for random init
+    assert 0.5 * np.log(cfg.vocab) < float(loss) < 3 * np.log(cfg.vocab)
+    leaves = jax.tree.leaves(grads)
+    assert leaves, "no grads"
+    for g in leaves:
+        assert np.all(np.isfinite(np.asarray(g, dtype=np.float32))), cfg.name
+
+
+def test_quantized_forward_close_to_bf16(arch_setup):
+    """Serving-time W8A8 quantization must track the bf16 forward."""
+    cfg, params = arch_setup
+    q8 = QuantConfig(w_bits=8, a_bits=8)
+    qparams = M.quantize_params(params, q8)
+    batch = make_batch(cfg, BATCH, SEQ, "train")
+    kw = dict(positions=batch.get("positions"),
+              patch_embeds=batch.get("patch_embeds"),
+              frames=batch.get("frames"))
+    x0, _, _ = M.forward(params, batch["tokens"], cfg, **kw)
+    x1, _, _ = M.forward(qparams, batch["tokens"], cfg, quant=q8, **kw)
+    a0 = np.asarray(x0, dtype=np.float32)
+    a1 = np.asarray(x1, dtype=np.float32)
+    assert np.all(np.isfinite(a1))
+    rel = np.abs(a1 - a0).mean() / (np.abs(a0).mean() + 1e-9)
+    assert rel < 0.15, (cfg.name, rel)
+
+
+def test_paper_w2a8_forward_finite(arch_setup):
+    """The arch's assigned ultra-low-bit config stays finite end to end."""
+    cfg, params = arch_setup
+    qcfg = cfg.quant
+    qparams = M.quantize_params(params, qcfg)
+    batch = make_batch(cfg, BATCH, SEQ, "train")
+    x, _, _ = M.forward(qparams, batch["tokens"], cfg, quant=qcfg,
+                        positions=batch.get("positions"),
+                        patch_embeds=batch.get("patch_embeds"),
+                        frames=batch.get("frames"))
+    assert np.all(np.isfinite(np.asarray(x, dtype=np.float32))), cfg.name

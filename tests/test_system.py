@@ -1,0 +1,54 @@
+"""End-to-end system behaviour: train -> checkpoint -> quantize (paper
+technique) -> serve, as one pipeline."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.pipeline import DataSpec
+from repro.models import model as M
+from repro.models.config import QuantConfig
+from repro.serving import engine as E
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def test_train_quantize_serve_pipeline(tmp_path):
+    """The full lifecycle the framework exists for: train a model with
+    the fault-tolerant trainer, quantize its weights to packed bipolar
+    planes (W4A8), and serve greedy completions that match the bf16
+    model's on a learnable stream."""
+    cfg = get_config("llama3-8b").reduced(n_layers=2, vocab=256)
+    spec = DataSpec(vocab=cfg.vocab, seq_len=32, global_batch=4, seed=5)
+    tcfg = TrainConfig(num_steps=40, peak_lr=1e-3, warmup_steps=5,
+                       ckpt_dir=str(tmp_path), ckpt_every=20)
+    state, hist = Trainer(cfg, tcfg, spec, async_ckpt=False).run(resume=False)
+    assert hist[-1] < hist[0]                       # learned something
+
+    params = state["params"]
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, (8,), dtype=np.int32)
+
+    def greedy(p, quant):
+        eng = E.Engine(p, cfg, n_slots=1, max_len=32, quant=quant)
+        req = E.Request(prompt=prompt, max_new_tokens=6)
+        eng.submit(req)
+        eng.run()
+        return req.out
+
+    out_bf = greedy(params, None)
+
+    # W8A8 is near-lossless: the whole greedy chain must match bf16
+    # (autoregressive chains compound any flip, so this is a strict check)
+    q8 = QuantConfig(w_bits=8, a_bits=8)
+    out_q8 = greedy(M.quantize_params(params, q8), q8)
+    assert out_q8 == out_bf, (out_q8, out_bf)
+
+    # W4A8 (aggressive): must complete and agree on the first
+    # (non-compounding) greedy token
+    q4 = QuantConfig(w_bits=4, a_bits=8)
+    out_q4 = greedy(M.quantize_params(params, q4), q4)
+    assert len(out_q4) == 6
+    assert out_q4[0] == out_bf[0], (out_q4, out_bf)

@@ -37,6 +37,20 @@ _DTYPE_BYTES = {
     "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
 }
 
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions.
+
+    Older releases return a *list* of per-device dicts (so ``ca["flops"]``
+    raises ``TypeError: list indices must be integers``); newer ones
+    return the dict directly.  Returns the first device's dict (SPMD
+    lowering makes all devices identical), ``{}`` when unavailable.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
 _OPCODE_RE = re.compile(r"((?:[a-z0-9\-])+)\(")

@@ -16,6 +16,6 @@ CONFIG = ModelConfig(
     d_ff=14336,
     vocab=128256,
     rope_theta=500000.0,
-    quant=QuantConfig(w_bits=2, a_bits=8),
+    quant=QuantConfig(w_bits=2, a_bits=8, kv_bits=8),
     max_seq_len=524288,
 )

@@ -22,6 +22,6 @@ CONFIG = ModelConfig(
     n_experts=8,
     top_k=2,
     expert_d_ff=14336,
-    quant=QuantConfig(w_bits=2, a_bits=8),
+    quant=QuantConfig(w_bits=2, a_bits=8, kv_bits=8),
     max_seq_len=1048576,
 )

@@ -85,6 +85,32 @@ def absmax_scale(x: jax.Array, n_bits: int, axis=None, keepdims=True,
     return jnp.maximum(amax, eps) / max_value(n_bits)
 
 
+def mse_scale(x: jax.Array, n_bits: int, axis=-1, *,
+              candidates: int = 15, lo: float = 0.65) -> jax.Array:
+    """Per-group clip-searched scale minimizing quantization MSE.
+
+    Sweeps ``candidates`` shrink factors in ``[lo, 1.0]`` of the absmax
+    scale and keeps, per reduction group, the one with the smallest
+    ``||q * s - x||^2``.  At low bit widths (<= 4) absmax wastes most of
+    the grid on outliers; a mild clip roughly halves weight MSE and is
+    what keeps greedy decode faithful at W4 (calibration-free analogue of
+    the ABQ-LLM/AWQ clip search).  Offline-cost only -- used for weight
+    preprocessing, never on the activation path.
+    """
+    xf = x.astype(jnp.float32)
+    base = absmax_scale(xf, n_bits, axis=axis, keepdims=True)
+    best_s, best_e = base, jnp.full_like(base, jnp.inf)
+    for c in np.linspace(lo, 1.0, candidates):
+        s = base * float(c)
+        q = quantize_values(xf, n_bits, s)
+        err = jnp.sum(jnp.square(q.astype(jnp.float32) * s - xf),
+                      axis=axis, keepdims=True)
+        take = err < best_e
+        best_s = jnp.where(take, s, best_s)
+        best_e = jnp.where(take, err, best_e)
+    return best_s
+
+
 # ---------------------------------------------------------------------------
 # Bit-plane decomposition / recovery (paper §3.2 data decomposition step)
 # ---------------------------------------------------------------------------

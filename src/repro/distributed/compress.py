@@ -22,7 +22,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.kernels.compat import shard_map
 
 
 def compressed_psum(tree, axis_name: str, *, bits: int = 8):

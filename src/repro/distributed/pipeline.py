@@ -15,8 +15,9 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.kernels.compat import shard_map
 
 
 def pipeline_apply(stage_fn, n_stages: int, n_micro: int, axis: str = "pipe"):

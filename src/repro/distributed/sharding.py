@@ -221,6 +221,11 @@ def shardings_for_caches(mesh: Mesh, caches):
         name = next((k for k in reversed(keys) if k), "")
         rule = _CACHE_RULES.get(name, ("__dp__",))
         rule = tuple(dp if r == "__dp__" else r for r in rule)
+        if name in ("k", "v") and getattr(leaf, "dtype", None) == np.uint32:
+            # packed bipolar KV planes carry a trailing (kv_bits, D/32)
+            # pair instead of D: extend the rule so suffix alignment keeps
+            # (B, L) on (dp, model) for both plain and (n_units,)-stacked
+            rule = rule + (None,)
         shape = leaf.shape
         # suffix-align so stacked (n_units, ...) caches work, but keep the
         # batch axis aligned to its true position: pad on the LEFT only by

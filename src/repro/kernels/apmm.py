@@ -49,7 +49,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import bipolar
-from repro.kernels import ref
+from repro.kernels import compat, ref
 
 # Default tile sizes: MXU-aligned (multiples of 128 on the GEMM dims) and
 # sized so packed tiles + unpacked int8 tiles + the int32 accumulator fit
@@ -211,7 +211,7 @@ def apmm_packed(ap: jax.Array, bp: jax.Array, a_scale, b_scale, *,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM(acc_shape, jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(ap, bp, a_scale, b_scale)

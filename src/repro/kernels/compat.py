@@ -1,0 +1,74 @@
+"""Compatibility shims over JAX / Pallas-TPU API drift.
+
+The Pallas TPU surface has been renamed across JAX releases and the
+kernels in this package must run on whichever release the container
+ships.  Every drift we paper over is centralized here so kernel files
+stay drift-free:
+
+* **Compiler-params class** -- ``pltpu.CompilerParams`` (new name) vs
+  ``pltpu.TPUCompilerParams`` (<= 0.4.x).  Use :func:`compiler_params`.
+* **Dimension semantics** -- the ``dimension_semantics=("parallel", ...,
+  "arbitrary")`` tuple is accepted as a constructor field on both
+  classes today, but releases have moved it between ``pallas_call`` and
+  the params object; :func:`compiler_params` retries without the field
+  (losing only a scheduling hint, never correctness) if the installed
+  class rejects it.
+* **shard_map location / kwarg** -- ``jax.shard_map`` (new) vs
+  ``jax.experimental.shard_map.shard_map`` (old), and the replication
+  check kwarg renamed ``check_rep`` -> ``check_vma``.  Use
+  :func:`shard_map`.
+
+Dispatch contract (see :mod:`repro.kernels.ops`): every kernel built on
+these shims runs identically under ``impl="pallas"`` (Mosaic, TPU),
+``impl="interpret"`` (kernel body in Python on CPU) and has a pure-jnp
+``impl="reference"`` twin operating on the same buffers.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+# new name first: releases that have both alias one to the other
+_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams", None)
+
+
+def compiler_params(dimension_semantics=None, **kwargs):
+    """Build the TPU compiler-params object for the installed JAX.
+
+    ``dimension_semantics``: tuple of "parallel"/"arbitrary" per grid dim
+    (a Mosaic scheduling hint).  Dropped silently when the installed
+    params class does not accept it -- the kernels only ever use it as a
+    hint; correctness never depends on it.
+    """
+    if _PARAMS_CLS is None:                      # pragma: no cover
+        return None
+    if dimension_semantics is not None:
+        try:
+            return _PARAMS_CLS(dimension_semantics=tuple(dimension_semantics),
+                               **kwargs)
+        except TypeError:
+            pass
+    return _PARAMS_CLS(**kwargs)
+
+
+def _resolve_shard_map():
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn
+    from jax.experimental.shard_map import shard_map as fn  # <= 0.4.x
+    return fn
+
+
+_SHARD_MAP = _resolve_shard_map()
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` under either import location / kwarg spelling."""
+    try:
+        return _SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check_vma)
+    except TypeError:
+        return _SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)

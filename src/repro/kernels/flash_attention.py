@@ -1,4 +1,4 @@
-"""Flash attention (online softmax) Pallas TPU kernel.
+"""Flash attention (online softmax) Pallas TPU kernels: float + bipolar KV.
 
 Motivated by the roofline analysis (EXPERIMENTS.md §Perf): prefill cells
 of MHA-heavy archs are dominated by materialized (Sq x T) score traffic
@@ -15,6 +15,16 @@ work unchanged.
 Grid ``(BH, Sq/bq, T/bk)`` with the KV axis innermost ("arbitrary");
 scratch: running max/denominator ``(bq, 1)`` and the f32 output
 accumulator ``(bq, D)`` -- the classic two-pass-free online softmax.
+
+:func:`flash_attention_quantized` extends this to the bipolar-INT KV
+cache (paper §3.1/§4.1 applied to the decode-dominating tensor): K/V
+arrive as packed uint32 bit planes ``(BH, T, n_bits, D/32)`` with
+per-(token, head) absmax scales, and *recovery happens inside the
+kernel* -- HBM moves ``kv_bits`` bits per cache element instead of 16,
+and the dequantized tile never round-trips through HBM (the §4.2
+"recovery in shared memory" scheduling, on the TPU memory hierarchy).
+:func:`attention_reference` is the pure-jnp twin used by the
+``reference`` impl of the :mod:`repro.kernels.ops` dispatch.
 """
 
 from __future__ import annotations
@@ -27,8 +37,38 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import bipolar
+from repro.kernels import compat
+
 DEFAULT_BQ = 512
 DEFAULT_BK = 512
+
+
+def _online_softmax_update(s, valid, v, m_ref, l_ref, acc_ref):
+    """One KV-tile update of the running (max, denom, acc) state.
+
+    Invalid slots are zeroed in ``p`` (not just pushed to -1e30): a row
+    whose every slot is masked must end with denominator ~0 so the final
+    clamp returns 0, identically across kernel and reference impls.
+    """
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * alpha + jnp.sum(p, -1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def _position_mask(qpos, kpos, causal: bool, window):
+    valid = kpos >= 0
+    if causal:
+        valid &= kpos <= qpos
+    if window is not None:
+        valid &= kpos > qpos - window
+    return valid
 
 
 def _kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, out_ref,
@@ -50,22 +90,9 @@ def _kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, out_ref,
 
     qpos = qp_ref[0][:, None]                     # (bq, 1) int32
     kpos = kp_ref[0][None, :]                     # (1, bk)
-    valid = kpos >= 0
-    if causal:
-        valid &= kpos <= qpos
-    if window is not None:
-        valid &= kpos > qpos - window
+    valid = _position_mask(qpos, kpos, causal, window)
     s = jnp.where(valid, s, -1e30)
-
-    m_prev, l_prev = m_ref[...], l_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
-    p = jnp.exp(s - m_new)
-    alpha = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_prev * alpha + jnp.sum(p, -1, keepdims=True)
-    m_ref[...] = m_new
-    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    _online_softmax_update(s, valid, v_ref[0], m_ref, l_ref, acc_ref)
 
     @pl.when(jk == nk - 1)
     def _done():
@@ -109,7 +136,140 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
                         pltpu.VMEM((bq, 1), jnp.float32),
                         pltpu.VMEM((bq, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q_pos, kv_pos, q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Bipolar-quantized KV cache variant (dequant-on-read in VMEM)
+# ---------------------------------------------------------------------------
+
+def _dequant_tile(packed, scale, n_bits: int, bk: int, dp: int):
+    """Packed planes (bk, n_bits, dp/32) uint32 + scale (bk, 1) -> f32 tile.
+
+    Bipolar recovery without materializing {-1,+1} planes:
+    ``v = (sum_i b_i << (i+1)) - (2^n - 1)`` (see bipolar.recover).
+    """
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 1, 32), 3)
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(bk, n_bits, dp).astype(jnp.int32)
+    acc = bits[:, 0, :] << 1
+    for i in range(1, n_bits):
+        acc = acc + (bits[:, i, :] << (i + 1))
+    vals = acc - bipolar.max_value(n_bits)
+    return vals.astype(jnp.float32) * scale
+
+
+def _kernel_quant(qp_ref, kp_ref, ks_ref, vs_ref, q_ref, kq_ref, vq_ref,
+                  out_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window,
+                  bq: int, bk: int, dp: int, n_bits: int):
+    jk = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full((bq, 1), -1e30, jnp.float32)
+        l_ref[...] = jnp.zeros((bq, 1), jnp.float32)
+        acc_ref[...] = jnp.zeros((bq, dp), jnp.float32)
+
+    # recover K/V tiles from packed bit planes entirely in VMEM; pad
+    # columns of D decode to garbage but q is zero-padded there, and pad
+    # T slots carry kv_pos=-1 so the position mask removes them.
+    k = _dequant_tile(kq_ref[0], ks_ref[0][:, None], n_bits, bk, dp)
+    v = _dequant_tile(vq_ref[0], vs_ref[0][:, None], n_bits, bk, dp)
+
+    q = q_ref[0]                                  # (bq, dp), zero pad cols
+    s = jax.lax.dot_general(q.astype(jnp.float32), k,
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qpos = qp_ref[0][:, None]
+    kpos = kp_ref[0][None, :]
+    valid = _position_mask(qpos, kpos, causal, window)
+    s = jnp.where(valid, s, -1e30)
+    _online_softmax_update(s, valid, v, m_ref, l_ref, acc_ref)
+
+    @pl.when(jk == nk - 1)
+    def _done():
+        out_ref[0] = (acc_ref[...]
+                      / jnp.maximum(l_ref[...], 1e-20)).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("d", "n_bits", "causal", "window", "block", "interpret"))
+def flash_attention_quantized(q: jax.Array,
+                              k_packed: jax.Array, k_scale: jax.Array,
+                              v_packed: jax.Array, v_scale: jax.Array,
+                              q_pos: jax.Array, kv_pos: jax.Array, *,
+                              d: int, n_bits: int,
+                              causal: bool = True, window=None,
+                              block: tuple = (DEFAULT_BQ, DEFAULT_BK),
+                              interpret: bool = False) -> jax.Array:
+    """Attention over a packed bipolar-INT KV cache, dequant-on-read.
+
+    Args:
+      q: ``(BH, Sq, Dp)`` with ``Dp = 32 * ceil(d/32)``; columns past the
+        true head dim ``d`` MUST be zero (the ops wrapper pads).
+      k_packed/v_packed: ``(BH, T, n_bits, Dp/32)`` uint32 bit planes.
+      k_scale/v_scale: ``(BH, T)`` f32 per-(token, head) absmax scales.
+      q_pos/kv_pos: ``(BH, Sq)`` / ``(BH, T)`` int32 absolute positions;
+        negative kv_pos = invalid slot (also used for T padding).
+      d: true head dim (sets the softmax scale).
+
+    Returns ``(BH, Sq, Dp)``; the caller slices ``[..., :d]``.
+    """
+    bh, sq, dp = q.shape
+    t = k_packed.shape[1]
+    dw = dp // bipolar.PACK_WIDTH
+    assert k_packed.shape == (bh, t, n_bits, dw), (k_packed.shape, q.shape)
+    bq, bk = min(block[0], sq), min(block[1], t)
+    if sq % bq or t % bk:
+        raise ValueError(f"({sq},{t}) not tiled by ({bq},{bk})")
+    kernel = functools.partial(
+        _kernel_quant, scale=1.0 / np.sqrt(d), causal=causal, window=window,
+        bq=bq, bk=bk, dp=dp, n_bits=n_bits)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, sq // bq, t // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),        # q_pos
+            pl.BlockSpec((1, bk), lambda b, i, j: (b, j)),        # kv_pos
+            pl.BlockSpec((1, bk), lambda b, i, j: (b, j)),        # k_scale
+            pl.BlockSpec((1, bk), lambda b, i, j: (b, j)),        # v_scale
+            pl.BlockSpec((1, bq, dp), lambda b, i, j: (b, i, 0)),  # q
+            pl.BlockSpec((1, bk, n_bits, dw),
+                         lambda b, i, j: (b, j, 0, 0)),            # k planes
+            pl.BlockSpec((1, bk, n_bits, dw),
+                         lambda b, i, j: (b, j, 0, 0)),            # v planes
+        ],
+        out_specs=pl.BlockSpec((1, bq, dp), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dp), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, dp), jnp.float32)],
+        compiler_params=compat.compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q_pos, kv_pos, k_scale, v_scale, q, k_packed, v_packed)
+
+
+def attention_reference(q, k, v, q_pos, kv_pos, *, causal=True, window=None):
+    """Pure-jnp oracle in the folded (BH, S, D) kernel layout.
+
+    Direct (non-online) softmax; fully-masked rows return 0, matching the
+    kernels' denominator clamp.
+    """
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,btd->bqt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(d)
+    valid = _position_mask(q_pos[:, :, None], kv_pos[:, None, :],
+                           causal, window)
+    s = jnp.where(valid, s, -1e30)
+    m = jnp.maximum(jnp.max(s, -1, keepdims=True), -1e30)
+    p = jnp.where(valid, jnp.exp(s - m), 0.0)
+    o = jnp.einsum("bqt,btd->bqd", p, v.astype(jnp.float32))
+    o = o / jnp.maximum(p.sum(-1, keepdims=True), 1e-20)
+    return o.astype(q.dtype)

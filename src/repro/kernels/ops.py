@@ -11,6 +11,14 @@ Every quantized op runs under one of three interchangeable implementations:
 
 The default comes from ``$REPRO_KERNEL_IMPL`` or the JAX backend
 (``pallas`` on TPU, ``reference`` elsewhere).
+
+Dispatch contract: all three impls consume the *same packed buffers* and
+compute the same function -- bit-exactly for the integer GEMM cores,
+to float tolerance for dequantizing ops (kv attention) -- enforced by
+tests/kernels/test_parity.py.  Ops covered: ``quantize_rows`` /
+``pack_weight``, ``ap_matmul`` / ``ap_linear``, and the bipolar
+KV-cache path ``quantize_kv`` / ``dequantize_kv`` /
+``kv_cache_attention`` (dequant-on-read flash attention).
 """
 
 from __future__ import annotations
@@ -25,6 +33,7 @@ import numpy as np
 from repro.core import bipolar
 from repro.core.bipolar import BipolarTensor
 from repro.kernels import apmm as apmm_kernel
+from repro.kernels import flash_attention as flash_kernel
 from repro.kernels import pack as pack_kernel
 from repro.kernels import ref
 
@@ -68,14 +77,19 @@ def _pad_dim(arr: jax.Array, axis: int, target: int, value=0) -> jax.Array:
 
 def quantize_rows(x: jax.Array, n_bits: int, *, pad_bit: int,
                   impl: str | None = None,
-                  scale: jax.Array | None = None) -> BipolarTensor:
+                  scale: jax.Array | None = None,
+                  scale_search: bool = False) -> BipolarTensor:
     """Quantize a row-major ``(R, K)`` matrix to packed bipolar planes.
 
-    Per-row absmax scales; K padded to the 32-bit word boundary with the
-    given pad bit (0 for activations/LHS, 1 for weights/RHS).
+    Per-row absmax scales (``scale_search=True``: per-row MSE clip search,
+    :func:`bipolar.mse_scale` -- weight preprocessing only); K padded to
+    the 32-bit word boundary with the given pad bit (0 for
+    activations/LHS, 1 for weights/RHS).
     """
     impl = impl or default_impl()
     r, k = x.shape
+    if scale is None and scale_search:
+        scale = bipolar.mse_scale(x, n_bits, axis=-1)
     if scale is None:
         scale = bipolar.absmax_scale(x, n_bits, axis=-1, keepdims=True)
     scale = scale.astype(jnp.float32).reshape(r, 1)
@@ -163,5 +177,86 @@ def ap_linear(x: jax.Array, w: BipolarTensor, *, a_bits: int,
 
 def pack_weight(w: jax.Array, n_bits: int, *,
                 impl: str | None = None) -> BipolarTensor:
-    """Offline weight preprocessing (§4.1): ``W (d_out, d_in)`` -> packed."""
-    return quantize_rows(w, n_bits, pad_bit=1, impl=impl)
+    """Offline weight preprocessing (§4.1): ``W (d_out, d_in)`` -> packed,
+    with the per-row MSE clip search (cheap: happens once at load)."""
+    return quantize_rows(w, n_bits, pad_bit=1, impl=impl, scale_search=True)
+
+
+# ---------------------------------------------------------------------------
+# Bipolar-quantized KV cache (pack on write, dequant on read)
+# ---------------------------------------------------------------------------
+
+def quantize_kv(x: jax.Array, kv_bits: int):
+    """K/V tensor ``(..., D)`` -> packed bipolar planes + per-head scales.
+
+    Quantizes along the head dim with a per-(token, head) absmax scale
+    (axis -1), decomposes into ``kv_bits`` bit planes and packs D into
+    uint32 words (paper §4.1 applied to the KV stream).  Returns
+    ``(packed (..., kv_bits, ceil(D/32)) uint32, scale (..., 1) f32)``.
+    Pure jnp: the pack is elementwise-cheap next to the projections that
+    produce K/V, and runs identically under every impl.
+    """
+    xf = x.astype(jnp.float32)
+    scale = bipolar.absmax_scale(xf, kv_bits, axis=-1, keepdims=True)
+    q = bipolar.quantize_values(xf, kv_bits, scale)
+    planes = bipolar.decompose(q, kv_bits)            # (kv_bits, ..., D)
+    planes = bipolar.pad_for_packing(planes, -1, 0)
+    packed = bipolar.pack_planes(planes, -1)          # (kv_bits, ..., Dw)
+    return jnp.moveaxis(packed, 0, -2), scale
+
+
+def dequantize_kv(packed: jax.Array, scale: jax.Array, d: int,
+                  dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`quantize_kv`: planes ``(..., n_bits, Dw)`` +
+    scale ``(..., 1)`` -> ``(..., D)`` (the ``reference``-impl read path
+    and the oracle for the in-kernel recovery)."""
+    n_bits = packed.shape[-2]
+    planes = jnp.moveaxis(packed, -2, 0)
+    vals = bipolar.recover(bipolar.unpack_planes(planes, -1, d), n_bits)
+    return (vals.astype(jnp.float32) * scale).astype(dtype)
+
+
+def kv_cache_attention(q: jax.Array,
+                       k_packed: jax.Array, k_scale: jax.Array,
+                       v_packed: jax.Array, v_scale: jax.Array,
+                       q_pos: jax.Array, kv_pos: jax.Array, *,
+                       d: int, causal: bool = True, window=None,
+                       impl: str | None = None) -> jax.Array:
+    """Attention over a packed bipolar KV cache, folded (BH, ...) layout.
+
+    ``q (BH, Sq, D)``; ``k_packed/v_packed (BH, T, n_bits, Dw)`` uint32;
+    ``k_scale/v_scale (BH, T, 1)`` f32; positions int32 with negative
+    kv_pos marking invalid slots.  Dispatches pallas | interpret (the
+    dequant-on-read flash kernel) | reference (jnp dequant + direct
+    softmax) -- all three agree to float tolerance.
+    """
+    impl = impl or default_impl()
+    bh, sq, _ = q.shape
+    t = k_packed.shape[1]
+    n_bits = k_packed.shape[-2]
+    if impl == "reference":
+        k = dequantize_kv(k_packed, k_scale, d)
+        v = dequantize_kv(v_packed, v_scale, d)
+        return flash_kernel.attention_reference(
+            q, k, v, q_pos, kv_pos, causal=causal, window=window)
+    dp = k_packed.shape[-1] * bipolar.PACK_WIDTH
+    # pad q's head dim with zeros to the packed word boundary (pad cols of
+    # the recovered K decode to garbage but meet only zeros in q . k)
+    qp_arr = _pad_dim(q, 2, dp)
+    sqp = _round_up(sq, 8)
+    bq = min(flash_kernel.DEFAULT_BQ, sqp)
+    sqp = _round_up(sqp, bq)
+    bk = min(flash_kernel.DEFAULT_BK, _round_up(t, 32))
+    tp = _round_up(t, bk)
+    qp_arr = _pad_dim(qp_arr, 1, sqp)
+    q_pos_p = _pad_dim(q_pos, 1, sqp)
+    kv_pos_p = _pad_dim(kv_pos, 1, tp, -1)      # pad slots are masked out
+    kpk = _pad_dim(k_packed, 1, tp)
+    vpk = _pad_dim(v_packed, 1, tp)
+    ks = _pad_dim(k_scale.reshape(bh, t), 1, tp, 1.0)
+    vs = _pad_dim(v_scale.reshape(bh, t), 1, tp, 1.0)
+    out = flash_kernel.flash_attention_quantized(
+        qp_arr, kpk, ks, vpk, vs, q_pos_p, kv_pos_p,
+        d=d, n_bits=n_bits, causal=causal, window=window,
+        block=(bq, bk), interpret=(impl == "interpret"))
+    return out[:, :sq, :d]

@@ -80,7 +80,7 @@ def _serve_cell(cfg, mesh, specs, shape, mode):
     qparams = jax.eval_shape(partial(M.quantize_params, qcfg=quant), params)
     seq, batch = shape["seq"], shape["batch"]
     caches = jax.eval_shape(
-        partial(M.init_caches, cfg, batch, seq))
+        partial(M.init_caches, cfg, batch, seq, quant=quant))
 
     def step(params, batch_in, caches):
         if mode == "prefill":
@@ -112,15 +112,18 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     """opts (hillclimb levers, EXPERIMENTS.md §Perf):
        moe_tp      -- MoE experts TP-sharded on d_ff instead of EP
        attn_chunks -- pin the KV-chunk scan axis unsharded
-       kv8         -- int8 KV cache
+       kv8         -- 8-bit bipolar KV cache
        bf16serve   -- disable weight quantization (paper FP baseline)
        bitserial   -- paper-faithful bit-serial APMM variant
     """
     import dataclasses as _dc
     from repro.models.config import QuantConfig as _QC
     cfg = get_config(arch)
-    if "kv8" in opts:
-        cfg = _dc.replace(cfg, kv_bits=8)
+    # the kv8 lever must stay a real A/B even though some shipped configs
+    # default QuantConfig.kv_bits=8: cells pin the KV format explicitly
+    kv = 8 if "kv8" in opts else None
+    cfg = _dc.replace(cfg, kv_bits=kv,
+                      quant=_dc.replace(cfg.quant, kv_bits=kv))
     if "bf16serve" in opts:
         cfg = _dc.replace(cfg, quant=_QC(w_bits=None))
     if "bitserial" in opts:
@@ -167,7 +170,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         t_compile = time.time() - t0 - t_lower
 
         ma = compiled.memory_analysis()
-        ca = compiled.cost_analysis() or {}
+        ca = H.xla_cost_analysis(compiled)
         hlo = H.analyze(compiled.as_text())
         rec.update(
             status="ok",

@@ -19,16 +19,35 @@ class QuantConfig:
 
     ``w_bits``/``a_bits`` apply to every APLinear-able GEMM (attention,
     MLP, MoE experts, SSM projections).  Router and norm layers stay in
-    bf16 (DESIGN.md §4 caveats).  ``w_bits=None`` disables quantization
-    (bf16 serving baseline).
+    bf16 (DESIGN.md §4 caveats).  ``w_bits=None`` disables weight
+    quantization (bf16 serving baseline).
+
+    ``kv_bits`` quantizes the decode KV cache to packed bipolar-INT bit
+    planes with per-(token, head) absmax scales: cache HBM traffic and
+    footprint scale with bits/element instead of 16 (the paper's bit-level
+    storage applied to the tensor that dominates long-context serving).
+    Any 1..8 bits; ``None`` falls back to ``ModelConfig.kv_bits`` and then
+    to the bf16 cache.  Reads dequantize on the fly -- inside the Pallas
+    flash-attention kernel on TPU, via jnp recovery under the
+    ``reference`` impl (see :mod:`repro.kernels.ops`).
     """
     w_bits: Optional[int] = None
     a_bits: int = 8
     variant: str = "fused"          # "fused" | "bitserial" (paper-faithful)
+    kv_bits: Optional[int] = None   # bipolar KV-cache bits (1..8)
 
     @property
     def enabled(self) -> bool:
         return self.w_bits is not None
+
+
+def effective_kv_bits(cfg: "ModelConfig",
+                      quant: Optional[QuantConfig]) -> Optional[int]:
+    """KV-cache bit width in effect: ``quant.kv_bits`` overrides
+    ``cfg.kv_bits``; ``None`` = bf16 cache."""
+    if quant is not None and quant.kv_bits is not None:
+        return quant.kv_bits
+    return cfg.kv_bits
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,8 +102,10 @@ class ModelConfig:
     n_patches: int = 0              # stub patch-embedding count
     # --- serving quantization ---
     quant: QuantConfig = QuantConfig()
-    # int8 KV cache (beyond-paper, bit-level storage applied to the KV
-    # stream): halves decode KV traffic; None = bf16 cache
+    # bipolar-INT KV cache (paper's bit-level storage applied to the KV
+    # stream): decode KV traffic scales with bits/element instead of 16.
+    # Any 1..8 bits; None = bf16 cache.  QuantConfig.kv_bits overrides
+    # this at serve time (see effective_kv_bits).
     kv_bits: Optional[int] = None
     # bf16 attention probabilities in the chunked-softmax dataflow (the
     # running max/denominator stay f32); halves score HBM traffic where

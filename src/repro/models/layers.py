@@ -6,6 +6,14 @@ weights are stored ``(d_out, d_in)`` ("NT" layout), matching the packed
 APMM kernels, so serving-time quantization is a pure param transform:
 replace the bf16 weight leaf with a :class:`BipolarTensor` and
 ``linear_apply`` dispatches to :func:`repro.kernels.ops.ap_linear`.
+
+The decode KV cache has the same bit-level treatment (``kv_bits``):
+``make_kv_cache`` allocates packed bipolar-INT bit planes + per-(token,
+head) absmax scales, ``attention_apply`` packs new K/V on write and reads
+through :func:`repro.kernels.ops.kv_cache_attention`, which dequantizes
+inside the flash-attention kernel (pallas/interpret) or via jnp recovery
+(reference).  The cache format is self-describing (bit width = plane-axis
+length), so apply code needs no extra static config.
 """
 
 from __future__ import annotations
@@ -251,8 +259,9 @@ def attention_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
         k = apply_rope(k, rope_pos if cache is None else rope_pos, cfg)
 
     new_cache = None
+    quant_kv = None           # (k_packed, k_scale, v_packed, v_scale) folded
     if cache is not None:
-        kv_bits = cfg.kv_bits
+        kv_bits = cache["k"].shape[-2] if "k_scale" in cache else None
         cache_len = cache["k"].shape[1]
         if s > cache_len:
             # SWA prefill longer than the ring: attend over the in-sequence
@@ -263,8 +272,10 @@ def attention_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
             new_cache = dict(cache, pos=tail_p,
                              index=jnp.zeros_like(cache["index"]))
             if kv_bits:
-                new_cache["k"], new_cache["k_scale"] = _quantize_kv(tail_k)
-                new_cache["v"], new_cache["v_scale"] = _quantize_kv(tail_v)
+                new_cache["k"], new_cache["k_scale"] = \
+                    ops.quantize_kv(tail_k, kv_bits)
+                new_cache["v"], new_cache["v_scale"] = \
+                    ops.quantize_kv(tail_v, kv_bits)
             else:
                 new_cache["k"] = tail_k.astype(cache["k"].dtype)
                 new_cache["v"] = tail_v.astype(cache["v"].dtype)
@@ -280,15 +291,14 @@ def attention_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
 
             wr = jax.vmap(row_write)
             if kv_bits:
-                k_q, k_s = _quantize_kv(k)
-                v_q, v_s = _quantize_kv(v)
+                k_q, k_s = ops.quantize_kv(k, kv_bits)
+                v_q, v_s = ops.quantize_kv(v, kv_bits)
                 ck, cks = wr(cache["k"], k_q, idx), wr(cache["k_scale"], k_s, idx)
                 cv, cvs = wr(cache["v"], v_q, idx), wr(cache["v_scale"], v_s, idx)
                 cpos = wr(cache["pos"], pos2d.astype(jnp.int32), idx)
                 new_cache = dict(cache, k=ck, v=cv, k_scale=cks, v_scale=cvs,
                                  pos=cpos, index=(idx + s) % cache_len)
-                k = _dequantize_kv(ck, cks, x.dtype)
-                v = _dequantize_kv(cv, cvs, x.dtype)
+                quant_kv = (ck, cks, cv, cvs)
                 kv_pos = cpos
             else:
                 ck = wr(cache["k"], k.astype(cache["k"].dtype), idx)
@@ -307,15 +317,31 @@ def attention_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
     # fold the GQA group into the query-sequence axis: (B, Hkv, G*S, D)
     qg = q.reshape(b, s, hk, g, dh).transpose(0, 2, 3, 1, 4).reshape(
         b, hk, g * s, dh)
-    kt = k.transpose(0, 2, 1, 3)
-    vt = v.transpose(0, 2, 1, 3)
     qp = jnp.repeat(pos2d[:, None, :], g, 1).reshape(b, g * s)
-    # decode (s==1) is a skinny GEMV -- direct; long train/prefill sequences
-    # use the online-softmax KV-chunked path to bound the score transient
-    chunked = (s > 1) and (k.shape[1] > ATTN_CHUNK_THRESHOLD)
-    o = _attn_core(qg, kt, vt, qp, kv_pos, causal=causal,
-                   window=cfg.window, chunked=chunked,
-                   score_bf16=cfg.attn_score_bf16)
+    if quant_kv is not None:
+        # bipolar-quantized cache read: fold heads into batch and let the
+        # ops dispatch pick the dequant-on-read kernel (pallas/interpret)
+        # or the jnp recovery path (reference)
+        ck, cks, cv, cvs = quant_kv
+        t = ck.shape[1]
+        fold_kv = lambda a: a.transpose((0, 2, 1) + tuple(
+            range(3, a.ndim))).reshape((b * hk, t) + a.shape[3:])
+        o = ops.kv_cache_attention(
+            qg.reshape(b * hk, g * s, dh),
+            fold_kv(ck), fold_kv(cks), fold_kv(cv), fold_kv(cvs),
+            jnp.repeat(qp, hk, 0), jnp.repeat(kv_pos, hk, 0),
+            d=dh, causal=causal, window=cfg.window).reshape(
+                b, hk, g * s, dh)
+    else:
+        kt = k.transpose(0, 2, 1, 3)
+        vt = v.transpose(0, 2, 1, 3)
+        # decode (s==1) is a skinny GEMV -- direct; long train/prefill
+        # sequences use the online-softmax KV-chunked path to bound the
+        # score transient
+        chunked = (s > 1) and (k.shape[1] > ATTN_CHUNK_THRESHOLD)
+        o = _attn_core(qg, kt, vt, qp, kv_pos, causal=causal,
+                       window=cfg.window, chunked=chunked,
+                       score_bf16=cfg.attn_score_bf16)
     o = o.reshape(b, hk, g, s, dh).transpose(0, 3, 1, 2, 4).reshape(
         b, s, h * dh).astype(x.dtype)
     out = linear_apply(params["wo"], o, quant=quant)
@@ -362,35 +388,31 @@ def cross_attention_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
     return linear_apply(params["wo"], o, quant=quant), new_cache
 
 
-def _quantize_kv(x):
-    """bf16 K/V (B,S,H,D) -> int8 codes + per-(token,head) f32 scale."""
-    xf = x.astype(jnp.float32)
-    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / 127.0
-    return jnp.round(xf / scale).astype(jnp.int8), scale
-
-
-def _dequantize_kv(codes, scale, dtype):
-    return (codes.astype(jnp.float32) * scale).astype(dtype)
-
-
-def make_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+def make_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
+                  kv_bits: Optional[int] = None) -> dict:
     """Decode KV cache; for SWA archs the cache is a ring of ``window``.
 
     ``index`` is per batch row: under continuous batching each slot
-    advances independently.  With ``cfg.kv_bits=8`` the cache stores int8
-    codes + per-(token,head) scales (halves decode KV traffic).
+    advances independently.  With ``kv_bits`` set (defaults to
+    ``cfg.kv_bits``; ``QuantConfig.kv_bits`` overrides via
+    ``config.effective_kv_bits`` in ``model.init_caches``) the cache
+    stores packed bipolar-INT bit planes ``(B, L, H, kv_bits, D/32)``
+    uint32 + per-(token, head) absmax scales: ``kv_bits`` bits per cache
+    element instead of 16, dequantized on read (repro.kernels.ops).
     """
+    kv_bits = cfg.kv_bits if kv_bits is None else kv_bits
     length = min(max_len, cfg.window) if cfg.window else max_len
     shape = (batch, length, cfg.n_kv_heads, cfg.head_dim)
     cache = {
         "pos": jnp.full((batch, length), -1, jnp.int32),
         "index": jnp.zeros((batch,), jnp.int32),
     }
-    if cfg.kv_bits:
-        assert cfg.kv_bits == 8, "int8 is the supported KV format"
-        cache["k"] = jnp.zeros(shape, jnp.int8)
-        cache["v"] = jnp.zeros(shape, jnp.int8)
+    if kv_bits:
+        assert 1 <= kv_bits <= 8, f"kv_bits={kv_bits} outside 1..8"
+        from repro.core import bipolar
+        packed = shape[:3] + (kv_bits, bipolar.packed_words(cfg.head_dim))
+        cache["k"] = jnp.zeros(packed, jnp.uint32)
+        cache["v"] = jnp.zeros(packed, jnp.uint32)
         cache["k_scale"] = jnp.zeros(shape[:3] + (1,), jnp.float32)
         cache["v_scale"] = jnp.zeros(shape[:3] + (1,), jnp.float32)
     else:

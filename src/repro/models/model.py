@@ -160,26 +160,31 @@ def _apply_block(p, x, cfg, mixer_kind, ffn_kind, *, positions, cache,
 
 
 def _make_cache_for(cfg: ModelConfig, kind: str, batch: int, max_len: int,
-                    dtype):
+                    dtype, kv_bits=None):
     if kind == "attn":
-        return L.make_kv_cache(cfg, batch, max_len, dtype)
+        return L.make_kv_cache(cfg, batch, max_len, dtype, kv_bits=kv_bits)
     return S.make_ssm_cache(cfg, batch, dtype)
 
 
 def init_caches(cfg: ModelConfig, batch: int, max_len: int,
-                enc_len: Optional[int] = None):
+                enc_len: Optional[int] = None,
+                quant: Optional[QuantConfig] = None):
     """Decode caches: {'prelude': [..], 'blocks': stacked-unit caches,
     ['cross': stacked per-unit cross-KV]}.  ``enc_len`` (audio): encoder
-    memory length for the projected cross-K/V cache."""
+    memory length for the projected cross-K/V cache.  ``quant``: its
+    ``kv_bits`` (over ``cfg.kv_bits``) selects packed bipolar KV caches."""
+    from repro.models.config import effective_kv_bits
     dt = jnp.dtype(cfg.dtype)
+    kvb = effective_kv_bits(cfg, quant)
     prelude_plan, unit_plan, n_units = plan_split(cfg)
     caches = {}
     if prelude_plan:
         caches["prelude"] = [
-            _make_cache_for(cfg, mk, batch, max_len, dt)
+            _make_cache_for(cfg, mk, batch, max_len, dt, kvb)
             for mk, _ in prelude_plan]
     unit_caches = [
-        [_make_cache_for(cfg, mk, batch, max_len, dt) for mk, _ in unit_plan]
+        [_make_cache_for(cfg, mk, batch, max_len, dt, kvb)
+         for mk, _ in unit_plan]
         for _ in range(n_units)]
     caches["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *unit_caches)
     if cfg.family == "audio":
@@ -207,7 +212,9 @@ def forward(params: dict, tokens: jax.Array, cfg: ModelConfig, *,
     :func:`loss_and_logits` in chunks.
     """
     b, s = tokens.shape
-    quant = quant if (quant and quant.enabled) else None
+    # a QuantConfig that only sets kv_bits still matters (cache reads);
+    # weight-path code checks quant.enabled / leaf types itself
+    quant = quant if (quant and (quant.enabled or quant.kv_bits)) else None
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
 
@@ -430,7 +437,8 @@ def _quantize_leaf(w: jax.Array, qcfg: QuantConfig,
     """
     shape = tuple(w.shape)
     w2 = w.reshape(-1, shape[-1]).astype(jnp.float32)
-    t = ops.quantize_rows(w2, qcfg.w_bits, pad_bit=1, impl="reference")
+    t = ops.quantize_rows(w2, qcfg.w_bits, pad_bit=1, impl="reference",
+                          scale_search=True)
     kw = t.packed.shape[-1]
     packed = t.packed.reshape(qcfg.w_bits, *shape[:-1], kw)
     scale = t.scale.reshape(*shape[:-1], 1)

@@ -60,6 +60,28 @@ def serve_step(params, batch: dict, caches, cfg: ModelConfig,
     return logits, caches
 
 
+def kv_cache_bytes(caches, *, payload_only: bool = False) -> int:
+    """Total bytes of the attention KV state in a cache tree.
+
+    Counts ``k``/``v`` buffers plus (unless ``payload_only``) their
+    quantization scales; positions/indices/SSM state are bookkeeping
+    shared by every format and excluded.  With bipolar ``kv_bits`` caches
+    the payload is exactly ``kv_bits/16`` of the bf16 payload (modulo the
+    32-element word rounding of the head dim).
+    """
+    keys = ("k", "v") if payload_only else ("k", "v", "k_scale", "v_scale")
+
+    def leaf_bytes(path, leaf):
+        names = [getattr(p, "key", None) for p in path]
+        name = next((n for n in reversed(names) if n), "")
+        if name not in keys or not hasattr(leaf, "nbytes"):
+            return 0
+        return int(leaf.nbytes)
+
+    flat = jax.tree_util.tree_flatten_with_path(caches)[0]
+    return sum(leaf_bytes(path, leaf) for path, leaf in flat)
+
+
 def sample(logits: jax.Array, *, temperature: float = 0.0,
            key=None) -> jax.Array:
     if temperature <= 0.0:
@@ -110,7 +132,7 @@ class Engine:
                  max_len: int = 256, quant: Optional[QuantConfig] = None):
         self.params, self.cfg, self.quant = params, cfg, quant
         self.n_slots, self.max_len = n_slots, max_len
-        self.caches = M.init_caches(cfg, n_slots, max_len)
+        self.caches = M.init_caches(cfg, n_slots, max_len, quant=quant)
         self.slot_req: list[Optional[Request]] = [None] * n_slots
         self.lengths = np.zeros(n_slots, np.int32)     # tokens seen per slot
         self.last_tok = np.zeros(n_slots, np.int32)    # next input token
@@ -130,7 +152,7 @@ class Engine:
 
     def _prefill_into(self, req: Request, slot: int):
         s = len(req.prompt)
-        one = M.init_caches(self.cfg, 1, self.max_len)
+        one = M.init_caches(self.cfg, 1, self.max_len, quant=self.quant)
         batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
         if self.cfg.family == "vlm":
             batch["positions"] = jnp.broadcast_to(

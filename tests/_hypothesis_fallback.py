@@ -1,0 +1,36 @@
+"""Minimal stand-in for ``hypothesis`` so property tests *skip* cleanly.
+
+Without this, an unconditional ``from hypothesis import ...`` kills the
+whole tier-1 run at collection on machines without the dev extra.  The
+fallback mimics just enough of the API surface the test files touch:
+``@given(...)`` replaces the test with a skip, ``@settings(...)`` is a
+no-op, and ``st.<strategy>(...)`` returns placeholders that are never
+drawn from.  Install the real thing via ``requirements-dev.txt`` to run
+the property sweeps.
+"""
+
+import pytest
+
+
+def given(*_args, **_kwargs):
+    def deco(_fn):
+        @pytest.mark.skip(reason="hypothesis not installed "
+                                 "(pip install -r requirements-dev.txt)")
+        def skipped():
+            pass
+        skipped.__name__ = _fn.__name__
+        skipped.__doc__ = _fn.__doc__
+        return skipped
+    return deco
+
+
+def settings(*_args, **_kwargs):
+    return lambda fn: fn
+
+
+class _Strategies:
+    def __getattr__(self, _name):
+        return lambda *a, **k: None
+
+
+st = _Strategies()

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# make tests/ importable from nested test dirs (tests/kernels/...) so the
+# shared _hypothesis_fallback stub resolves everywhere
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

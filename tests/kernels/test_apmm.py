@@ -8,7 +8,11 @@ bit-exactly against plain integer matmul in test_bipolar.py.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:    # property tests skip (not error) without hypothesis
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import bipolar
 from repro.kernels import ops, pack, ref

@@ -1,0 +1,119 @@
+"""Cross-impl kernel parity: ``reference`` vs ``interpret`` must agree on
+the same packed buffers for every op the model graph dispatches through
+:mod:`repro.kernels.ops` -- the APMM GEMMs (bit-exactly) and the
+bipolar-quantized KV-cache attention (float tolerance).
+
+This is the contract that makes ``REPRO_KERNEL_IMPL`` a free choice: CPU
+correctness runs (`reference`), kernel-body debugging (`interpret`) and
+TPU serving (`pallas`) all compute the same function.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.flash_attention import attention_reference
+
+RNG = np.random.default_rng(7)
+
+BITS = [2, 4, 7, 8]
+KS = [64, 67]          # word-aligned and odd K (pad-correction path)
+
+
+def _pair(m, n, k, bits):
+    a = jnp.asarray(RNG.standard_normal((m, k)), jnp.float32)
+    b = jnp.asarray(RNG.standard_normal((n, k)), jnp.float32)
+    at = ops.quantize_rows(a, 8, pad_bit=0, impl="reference")
+    bt = ops.quantize_rows(b, bits, pad_bit=1, impl="reference")
+    return at, bt
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("k", KS)
+@pytest.mark.parametrize("variant", ["fused", "bitserial"])
+def test_ap_matmul_reference_interpret_parity(bits, k, variant):
+    at, bt = _pair(24, 40, k, bits)
+    y_ref = np.asarray(ops.ap_matmul(at, bt, raw=True, impl="reference",
+                                     variant=variant))
+    y_int = np.asarray(ops.ap_matmul(at, bt, raw=True, impl="interpret",
+                                     variant=variant))
+    np.testing.assert_array_equal(y_int, y_ref)
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("k", KS)
+def test_ap_linear_reference_interpret_parity(bits, k):
+    x = jnp.asarray(RNG.standard_normal((3, 5, k)), jnp.float32)
+    wt = ops.pack_weight(jnp.asarray(RNG.standard_normal((17, k)),
+                                     jnp.float32), bits, impl="reference")
+    y_ref = np.asarray(ops.ap_linear(x, wt, a_bits=8, impl="reference"))
+    y_int = np.asarray(ops.ap_linear(x, wt, a_bits=8, impl="interpret"))
+    # same int core; dequant runs in a different order -> float tolerance
+    np.testing.assert_allclose(y_int, y_ref, rtol=1e-5, atol=1e-5)
+
+
+# --- bipolar-quantized KV-cache attention ---------------------------------
+
+def _attn_inputs(bh=4, sq=6, t=37, d=16):
+    q = jnp.asarray(RNG.standard_normal((bh, sq, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((bh, t, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((bh, t, d)), jnp.float32)
+    q_pos = jnp.broadcast_to(jnp.arange(t - sq, t, dtype=jnp.int32), (bh, sq))
+    # a few invalid (empty-ring) slots, like a part-filled cache
+    kv_pos = jnp.where(jnp.arange(t) < t - 3, jnp.arange(t), -1)
+    kv_pos = jnp.broadcast_to(kv_pos, (bh, t)).astype(jnp.int32)
+    return q, k, v, q_pos, kv_pos
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("window", [None, 8])
+def test_kv_attention_reference_interpret_parity(bits, window):
+    q, k, v, q_pos, kv_pos = _attn_inputs()
+    kp, ks = ops.quantize_kv(k, bits)
+    vp, vs = ops.quantize_kv(v, bits)
+    args = (q, kp, ks, vp, vs, q_pos, kv_pos)
+    y_ref = np.asarray(ops.kv_cache_attention(
+        *args, d=q.shape[-1], window=window, impl="reference"))
+    y_int = np.asarray(ops.kv_cache_attention(
+        *args, d=q.shape[-1], window=window, impl="interpret"))
+    np.testing.assert_allclose(y_int, y_ref, rtol=2e-5, atol=2e-5)
+
+
+def _kv_error(bits, impl="reference"):
+    q, k, v, q_pos, kv_pos = _attn_inputs()
+    y_f = np.asarray(attention_reference(q, k, v, q_pos, kv_pos))
+    kp, ks = ops.quantize_kv(k, bits)
+    vp, vs = ops.quantize_kv(v, bits)
+    y_q = np.asarray(ops.kv_cache_attention(
+        q, kp, ks, vp, vs, q_pos, kv_pos, d=q.shape[-1], impl=impl))
+    return float(np.abs(y_q - y_f).max()), y_q, y_f
+
+
+def test_kv8_attention_close_to_float():
+    """8-bit bipolar KV must track float attention tightly (the serving
+    default): absmax odd-grid step is ~0.8% of the per-head range."""
+    err, y_q, y_f = _kv_error(8)
+    np.testing.assert_allclose(y_q, y_f, rtol=2e-2, atol=2e-2)
+
+
+def test_fully_masked_rows_return_zero_everywhere():
+    """A row whose every slot is invalid (empty cache lane) must yield 0
+    under reference AND interpret -- not mean(V) or padded-slot garbage."""
+    q, k, v, q_pos, _ = _attn_inputs()
+    kv_pos = jnp.full(k.shape[:2], -1, jnp.int32)       # nothing valid
+    kp, ks = ops.quantize_kv(k, 8)
+    vp, vs = ops.quantize_kv(v, 8)
+    for impl in ("reference", "interpret"):
+        y = np.asarray(ops.kv_cache_attention(
+            q, kp, ks, vp, vs, q_pos, kv_pos, d=q.shape[-1], impl=impl))
+        np.testing.assert_array_equal(y, np.zeros_like(y), err_msg=impl)
+
+
+def test_kv_bits_degrade_monotonically():
+    """Coarser KV caches may only get worse: err(2) >= err(4) >= err(8)."""
+    e2, _, _ = _kv_error(2)
+    e4, _, _ = _kv_error(4)
+    e8, _, _ = _kv_error(8)
+    assert e8 <= e4 <= e2, (e8, e4, e2)
+    assert e8 < 0.02, e8

@@ -1,0 +1,195 @@
+"""Decode-capacity benchmark: contiguous slots vs the paged block pool.
+
+Extends the roofline model (benchmarks/roofline.py) to serving *memory*
+capacity: decode is KV-HBM-bound, so at a fixed cache-byte budget the
+number of concurrent requests an engine can hold -- and with it decode
+batch size and throughput -- is set by bytes per *resident* token.  The
+contiguous engine reserves ``max_len`` tokens per slot regardless of
+request length; the paged pool (src/repro/serving/paged_cache.py) holds
+``ceil(len / block_size)`` blocks per request, so capacity scales with
+the actual length mix and with ``kv_bits``.
+
+Per (kv_bits x request-length mix) this script reports:
+
+* bytes per cached token (packed bipolar planes + scales vs bf16),
+* max concurrent requests at a fixed pool-byte budget, contiguous vs
+  paged (analytic, from the mix), and the capacity ratio,
+* tokens resident at that point and the paged pool's internal
+  fragmentation,
+* decode HBM time per step for the resident KV bytes at the roofline
+  HBM bandwidth (the roofline.py memory term restricted to KV traffic),
+
+and cross-checks the analytic pool model against the real
+``PagedKVPool`` block accounting on a reduced config (same alloc code
+the engine runs).  Results go to ``BENCH_paged_kv.json``.
+
+Usage:  PYTHONPATH=src:. python -m benchmarks.paged_kv_capacity \
+            [--out BENCH_paged_kv.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import numpy as np
+
+HBM_BW = 819e9          # bytes/s/chip, matches benchmarks/roofline.py
+
+# a serving-shape reference arch for the analytic model (llama3-8b-like)
+N_LAYERS = 32
+N_KV_HEADS = 8
+HEAD_DIM = 128
+MAX_LEN = 2048
+BLOCK_SIZE = 16
+POOL_BYTES = 8 << 30    # 8 GiB KV budget per chip
+
+MIXES = {
+    # name -> (low, high) request lengths (tokens, uniform)
+    "short": (16, 64),
+    "mixed": (16, 512),
+    "long": (512, 2048),
+}
+
+
+def bytes_per_token(kv_bits: int, n_kv_heads: int = N_KV_HEADS,
+                    head_dim: int = HEAD_DIM,
+                    n_layers: int = N_LAYERS) -> int:
+    """Cache bytes per resident token across all layers (K + V).
+
+    kv_bits=16 = the bf16 cache; otherwise packed bipolar planes
+    (kv_bits uint32 words per 32 elements) + one f32 scale per
+    (token, head) for each of K and V."""
+    if kv_bits == 16:
+        per_head = 2 * head_dim * 2                   # K+V bf16
+    else:
+        words = -(-head_dim // 32)
+        per_head = 2 * (kv_bits * words * 4 + 4)      # planes + scale
+    return per_head * n_kv_heads * n_layers
+
+
+def capacity(pool_bytes: int, kv_bits: int, lens: np.ndarray,
+             block_size: int = BLOCK_SIZE, max_len: int = MAX_LEN) -> dict:
+    """Concurrent requests held at ``pool_bytes``: contiguous reserves
+    ``max_len`` tokens per slot; paged reserves whole blocks."""
+    bpt = bytes_per_token(kv_bits)
+    slots = int(pool_bytes // (max_len * bpt))
+    block_bytes = block_size * bpt
+    n_blocks = int(pool_bytes // block_bytes)
+    free = n_blocks
+    admitted = tokens = blocks_used = 0
+    for ln in lens:
+        need = -(-int(ln) // block_size)
+        if need > free:
+            break
+        free -= need
+        blocks_used += need
+        admitted += 1
+        tokens += int(ln)
+    resident_bytes = blocks_used * block_bytes
+    return dict(
+        kv_bits=kv_bits,
+        bytes_per_token=bpt,
+        contiguous_requests=slots,
+        paged_requests=admitted,
+        capacity_ratio=admitted / max(slots, 1),
+        tokens_resident=tokens,
+        fragmentation=(1.0 - tokens / (blocks_used * block_size))
+        if blocks_used else 0.0,
+        # roofline memory term for one decode step (read all resident KV)
+        decode_hbm_ms=resident_bytes / HBM_BW * 1e3,
+    )
+
+
+def run_analytic(seed: int = 0) -> list:
+    rng = np.random.default_rng(seed)
+    rows = []
+    for mix, (lo, hi) in MIXES.items():
+        lens = rng.integers(lo, hi + 1, size=100_000)
+        for kv_bits in (2, 4, 8, 16):
+            rows.append(dict(mix=mix, len_range=[lo, hi],
+                             **capacity(POOL_BYTES, kv_bits, lens)))
+    return rows
+
+
+def run_empirical() -> dict:
+    """Cross-check the analytic block model against the real pool: same
+    byte budget, same mix, counted by PagedKVPool's own alloc/report."""
+    import jax  # noqa: F401  (pulls in the repro stack)
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.serving.engine import kv_cache_bytes
+    from repro.serving.paged_cache import PagedKVPool
+
+    cfg = get_config("llama3-8b").reduced(n_layers=2, d_head=32)
+    kv8 = dataclasses.replace(cfg.quant, w_bits=None, kv_bits=8)
+    n_slots, max_len, block_size = 2, 256, 16
+    budget = kv_cache_bytes(M.init_caches(cfg, n_slots, max_len, quant=kv8))
+    probe = PagedKVPool(cfg, 2, block_size, quant=kv8)
+    per_block = kv_cache_bytes(probe.caches) // 2
+    pool = PagedKVPool(cfg, int(budget // per_block), block_size, quant=kv8)
+
+    rng = np.random.default_rng(0)
+    admitted = tokens = 0
+    while True:
+        ln = int(rng.integers(16, 129))
+        need = pool.blocks_for(ln)
+        if need > pool.free_blocks:
+            break
+        pool.alloc(need)
+        admitted += 1
+        tokens += ln
+    rep = pool.report(tokens_resident=tokens)
+    return dict(arch="llama3-8b reduced", kv_bits=8,
+                budget_bytes=int(budget),
+                pool_bytes=rep["pool_bytes"],
+                contiguous_requests=n_slots,
+                paged_requests=admitted,
+                capacity_ratio=admitted / n_slots,
+                fragmentation=rep["fragmentation"],
+                occupancy=rep["occupancy"])
+
+
+def table(rows: list) -> str:
+    hdr = ("| mix | kv_bits | B/token | contiguous | paged | ratio "
+           "| frag | decode HBM/step |\n|---|---|---|---|---|---|---|---|\n")
+    out = []
+    for r in rows:
+        out.append(
+            f"| {r['mix']} | {r['kv_bits']} | {r['bytes_per_token']} | "
+            f"{r['contiguous_requests']} | {r['paged_requests']} | "
+            f"{r['capacity_ratio']:.1f}x | {r['fragmentation']*100:.1f}% | "
+            f"{r['decode_hbm_ms']:.2f}ms |")
+    return hdr + "\n".join(out) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_paged_kv.json")
+    ap.add_argument("--skip-empirical", action="store_true")
+    args = ap.parse_args()
+    rows = run_analytic()
+    result = dict(
+        model=dict(n_layers=N_LAYERS, n_kv_heads=N_KV_HEADS,
+                   head_dim=HEAD_DIM, max_len=MAX_LEN,
+                   block_size=BLOCK_SIZE, pool_bytes=POOL_BYTES,
+                   hbm_bw=HBM_BW),
+        analytic=rows,
+    )
+    if not args.skip_empirical:
+        result["empirical"] = run_empirical()
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(table(rows))
+    if "empirical" in result:
+        e = result["empirical"]
+        print(f"empirical ({e['arch']}, kv_bits=8, equal bytes): "
+              f"{e['paged_requests']} paged vs {e['contiguous_requests']} "
+              f"contiguous requests = {e['capacity_ratio']:.1f}x, "
+              f"fragmentation {e['fragmentation']*100:.1f}%")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

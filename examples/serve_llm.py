@@ -6,7 +6,14 @@ paper's W2A8 packed bipolar format, and serves a mixed queue of requests
 through the continuous-batching engine -- then does the same in bf16 and
 compares tokens/s and greedy outputs.
 
+``--paged`` switches the quantized run to the paged block-pool engine
+(kv_bits=8 packed KV planes shared through block tables, scheduler with
+FCFS admission + preemption -- see src/repro/serving/paged_cache.py) and
+prints the pool occupancy report.
+
 Run:  PYTHONPATH=src python examples/serve_llm.py [--new-tokens 12]
+                                                  [--paged]
+                                                  [--block-size 16]
 """
 
 import argparse
@@ -21,8 +28,10 @@ from repro.models.config import QuantConfig
 from repro.serving import engine as E
 
 
-def serve(params, cfg, prompts, quant, new_tokens):
-    eng = E.Engine(params, cfg, n_slots=4, max_len=128, quant=quant)
+def serve(params, cfg, prompts, quant, new_tokens, *, paged=False,
+          block_size=16):
+    eng = E.Engine(params, cfg, n_slots=4, max_len=128, quant=quant,
+                   paged=paged, block_size=block_size)
     reqs = [E.Request(prompt=p, max_new_tokens=new_tokens) for p in prompts]
     for r in reqs:
         eng.submit(r)
@@ -30,12 +39,17 @@ def serve(params, cfg, prompts, quant, new_tokens):
     eng.run()
     dt = time.perf_counter() - t0
     total = sum(len(r.out) for r in reqs)
-    return reqs, total / dt
+    return reqs, total / dt, eng
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve the quantized run on the paged block-pool "
+                         "engine (kv_bits=8 KV planes + block tables)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per pool block (--paged)")
     args = ap.parse_args()
 
     cfg = get_config("llama3-8b").reduced(
@@ -50,21 +64,33 @@ def main():
                for i in range(8)]
 
     print("— serving bf16 …")
-    reqs_bf, tps_bf = serve(params, cfg, prompts, None, args.new_tokens)
+    reqs_bf, tps_bf, _ = serve(params, cfg, prompts, None, args.new_tokens)
 
-    qcfg = QuantConfig(w_bits=2, a_bits=8)
+    kv_bits = 8 if args.paged else None
+    qcfg = QuantConfig(w_bits=2, a_bits=8, kv_bits=kv_bits)
     qparams = M.quantize_params(params, qcfg)
-    print("— serving W2A8 (paper technique: packed bipolar weights) …")
-    reqs_q, tps_q = serve(qparams, cfg, prompts, qcfg, args.new_tokens)
+    label = "W2A8+paged-KV8" if args.paged else "W2A8"
+    print(f"— serving {label} (paper technique: packed bipolar "
+          f"{'weights + paged KV pool' if args.paged else 'weights'}) …")
+    reqs_q, tps_q, eng_q = serve(qparams, cfg, prompts, qcfg,
+                                 args.new_tokens, paged=args.paged,
+                                 block_size=args.block_size)
 
     agree = np.mean([
         np.mean(np.asarray(a.out[:4]) == np.asarray(b.out[:4]))
         for a, b in zip(reqs_bf, reqs_q)])
     print(f"bf16   : {tps_bf:6.1f} tok/s")
-    print(f"W2A8   : {tps_q:6.1f} tok/s   (CPU reference impl; on TPU the "
-          f"W2 path moves 8x fewer weight bytes -> see benchmarks F7)")
+    print(f"{label:7s}: {tps_q:6.1f} tok/s   (CPU reference impl; on TPU "
+          f"the W2 path moves 8x fewer weight bytes -> see benchmarks F7)")
     print(f"greedy agreement on first 4 tokens: {agree * 100:.0f}% "
           f"(W2 is aggressive; this is a random-weight toy)")
+    if args.paged:
+        rep = eng_q.report()
+        print(f"pool: {rep['n_usable']} blocks x {rep['block_size']} tok "
+              f"@ kv_bits={rep['kv_bits']}, "
+              f"{rep['pool_bytes'] / 1024:.0f} KiB, "
+              f"{rep['preemptions']} preemptions, "
+              f"{rep['rejections']} rejections")
     assert all(r.done for r in reqs_bf + reqs_q)
     print("done.")
 

@@ -256,6 +256,119 @@ def flash_attention_quantized(q: jax.Array,
     )(q_pos, kv_pos, k_scale, v_scale, q, k_packed, v_packed)
 
 
+# ---------------------------------------------------------------------------
+# Paged variant: KV read through a block table (serving block pool)
+# ---------------------------------------------------------------------------
+
+def _kernel_paged(bt_ref, qp_ref, kp_ref, ks_ref, vs_ref, q_ref, kq_ref,
+                  vq_ref, out_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window,
+                  gq: int, bs: int, dp: int, n_bits: int):
+    del bt_ref  # consumed by the index maps (scalar prefetch)
+    jk = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full((gq, 1), -1e30, jnp.float32)
+        l_ref[...] = jnp.zeros((gq, 1), jnp.float32)
+        acc_ref[...] = jnp.zeros((gq, dp), jnp.float32)
+
+    # one physical block of the pool, routed here by the block table:
+    # kq_ref block is (1, bs, 1, n_bits, dw) -> (bs, n_bits, dw)
+    k = _dequant_tile(kq_ref[0][:, 0], ks_ref[0], n_bits, bs, dp)
+    v = _dequant_tile(vq_ref[0][:, 0], vs_ref[0], n_bits, bs, dp)
+
+    q = q_ref[0, 0]                               # (gq, dp), zero pad cols
+    s = jax.lax.dot_general(q.astype(jnp.float32), k,
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qpos = qp_ref[0][:, None]                     # (gq, 1)
+    kpos = kp_ref[0][None, :]                     # (1, bs)
+    valid = _position_mask(qpos, kpos, causal, window)
+    s = jnp.where(valid, s, -1e30)
+    _online_softmax_update(s, valid, v, m_ref, l_ref, acc_ref)
+
+    @pl.when(jk == nk - 1)
+    def _done():
+        out_ref[0, 0] = (acc_ref[...]
+                         / jnp.maximum(l_ref[...], 1e-20)).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("d", "n_bits", "causal", "window", "interpret"))
+def flash_attention_paged_quantized(q: jax.Array,
+                                    k_pool: jax.Array, k_scale: jax.Array,
+                                    v_pool: jax.Array, v_scale: jax.Array,
+                                    pool_pos: jax.Array,
+                                    block_tables: jax.Array,
+                                    q_pos: jax.Array, *,
+                                    d: int, n_bits: int,
+                                    causal: bool = True, window=None,
+                                    interpret: bool = False) -> jax.Array:
+    """Dequant-on-read attention over a *paged* bipolar-INT KV pool.
+
+    The pool stores fixed-size token blocks shared by all requests; each
+    request addresses its blocks through a block table.  The table is a
+    scalar-prefetch operand: the Mosaic grid walks ``(B, H, n_blocks)``
+    and the K/V block specs index the pool with ``table[b, j]``, so HBM
+    only ever moves the blocks a request actually owns -- the gather
+    never materializes a contiguous copy.
+
+    Args:
+      q: ``(B, H, G, Dp)`` -- per-kv-head grouped queries, zero-padded
+        past the true head dim ``d`` (``Dp = 32*ceil(d/32)``).
+      k_pool/v_pool: ``(n_blocks, bs, H, n_bits, Dp/32)`` uint32 planes.
+      k_scale/v_scale: ``(n_blocks, bs, H)`` f32 absmax scales.
+      pool_pos: ``(n_blocks, bs)`` int32 absolute positions, -1 = empty
+        slot (freshly allocated or null block 0).
+      block_tables: ``(B, NB)`` int32 physical block ids; rows pad with
+        0, the reserved null block whose positions stay -1.
+      q_pos: ``(B, G)`` int32 query positions (-1 rows are masked out).
+
+    Returns ``(B, H, G, Dp)``; the caller slices ``[..., :d]``.
+    """
+    b, h, gq, dp = q.shape
+    n_blocks, bs, hp, nb_bits, dw = k_pool.shape
+    nb = block_tables.shape[1]
+    assert (hp, nb_bits, dw * bipolar.PACK_WIDTH) == (h, n_bits, dp), (
+        k_pool.shape, q.shape)
+    kernel = functools.partial(
+        _kernel_paged, scale=1.0 / np.sqrt(d), causal=causal, window=window,
+        gq=gq, bs=bs, dp=dp, n_bits=n_bits)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, h, nb),
+        in_specs=[
+            pl.BlockSpec((1, gq), lambda i, j, k, bt: (i, 0)),     # q_pos
+            pl.BlockSpec((1, bs), lambda i, j, k, bt: (bt[i, k], 0)),  # pos
+            pl.BlockSpec((1, bs, 1),
+                         lambda i, j, k, bt: (bt[i, k], 0, j)),    # k_scale
+            pl.BlockSpec((1, bs, 1),
+                         lambda i, j, k, bt: (bt[i, k], 0, j)),    # v_scale
+            pl.BlockSpec((1, 1, gq, dp), lambda i, j, k, bt: (i, j, 0, 0)),
+            pl.BlockSpec((1, bs, 1, n_bits, dw),
+                         lambda i, j, k, bt: (bt[i, k], 0, j, 0, 0)),
+            pl.BlockSpec((1, bs, 1, n_bits, dw),
+                         lambda i, j, k, bt: (bt[i, k], 0, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, gq, dp),
+                               lambda i, j, k, bt: (i, j, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((gq, 1), jnp.float32),
+                        pltpu.VMEM((gq, 1), jnp.float32),
+                        pltpu.VMEM((gq, dp), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, gq, dp), q.dtype),
+        compiler_params=compat.compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables, q_pos, pool_pos, k_scale, v_scale, q, k_pool, v_pool)
+
+
 def attention_reference(q, k, v, q_pos, kv_pos, *, causal=True, window=None):
     """Pure-jnp oracle in the folded (BH, S, D) kernel layout.
 

@@ -18,7 +18,9 @@ to float tolerance for dequantizing ops (kv attention) -- enforced by
 tests/kernels/test_parity.py.  Ops covered: ``quantize_rows`` /
 ``pack_weight``, ``ap_matmul`` / ``ap_linear``, and the bipolar
 KV-cache path ``quantize_kv`` / ``dequantize_kv`` /
-``kv_cache_attention`` (dequant-on-read flash attention).
+``kv_cache_attention`` (dequant-on-read flash attention) /
+``paged_kv_cache_attention`` (same, reading K/V through a serving
+block table -- tests/kernels/test_paged_attention.py).
 """
 
 from __future__ import annotations
@@ -186,6 +188,16 @@ def pack_weight(w: jax.Array, n_bits: int, *,
 # Bipolar-quantized KV cache (pack on write, dequant on read)
 # ---------------------------------------------------------------------------
 
+def fold_kv_heads(a: jax.Array) -> jax.Array:
+    """``(B, T, H, ...) -> (BH, T, ...)``: fold the KV-head axis into
+    batch, the layout every KV-cache attention kernel consumes (one
+    shared definition so the packed-plane layout can change in one
+    place)."""
+    b, t, h = a.shape[:3]
+    return a.transpose((0, 2, 1) + tuple(range(3, a.ndim))).reshape(
+        (b * h, t) + a.shape[3:])
+
+
 def quantize_kv(x: jax.Array, kv_bits: int):
     """K/V tensor ``(..., D)`` -> packed bipolar planes + per-head scales.
 
@@ -260,3 +272,55 @@ def kv_cache_attention(q: jax.Array,
         d=d, n_bits=n_bits, causal=causal, window=window,
         block=(bq, bk), interpret=(impl == "interpret"))
     return out[:, :sq, :d]
+
+
+def paged_kv_cache_attention(q: jax.Array,
+                             k_pool: jax.Array, k_scale: jax.Array,
+                             v_pool: jax.Array, v_scale: jax.Array,
+                             pool_pos: jax.Array, block_tables: jax.Array,
+                             q_pos: jax.Array, *,
+                             d: int, causal: bool = True, window=None,
+                             impl: str | None = None) -> jax.Array:
+    """Attention over a *paged* packed bipolar KV pool via a block table.
+
+    ``q (B, H, G, D)`` per-kv-head grouped queries; the pool holds
+    fixed-size token blocks shared by every request:
+    ``k_pool/v_pool (n_blocks, bs, H, n_bits, Dw)`` uint32 planes,
+    ``k_scale/v_scale (n_blocks, bs, H, 1)`` f32, ``pool_pos
+    (n_blocks, bs)`` int32 (-1 = empty slot).  ``block_tables (B, NB)``
+    int32 maps each request's logical blocks to physical ids; rows pad
+    with 0, the reserved null block whose positions stay -1.
+
+    Dispatch: pallas | interpret run the block-table-gathering flash
+    kernel (the table is a scalar-prefetch operand indexing the pool
+    block specs); reference gathers the request's blocks with jnp
+    indexing and reuses the contiguous :func:`kv_cache_attention`
+    reference path on the exact same packed planes.
+    """
+    impl = impl or default_impl()
+    b, h, g, _ = q.shape
+    n_blocks, bs = pool_pos.shape
+    nb = block_tables.shape[1]
+    n_bits = k_pool.shape[-2]
+    if impl == "reference":
+        flat = block_tables.reshape(-1)
+        t = nb * bs
+        gath = lambda a: a[flat].reshape((b, t) + a.shape[2:])
+        kv_pos = gath(pool_pos[:, :, None])[..., 0]
+        o = kv_cache_attention(
+            q.reshape(b * h, g, q.shape[-1]),
+            fold_kv_heads(gath(k_pool)), fold_kv_heads(gath(k_scale)),
+            fold_kv_heads(gath(v_pool)), fold_kv_heads(gath(v_scale)),
+            jnp.repeat(q_pos, h, 0), jnp.repeat(kv_pos, h, 0),
+            d=d, causal=causal, window=window, impl=impl)
+        return o.reshape(b, h, g, d)
+    dp = k_pool.shape[-1] * bipolar.PACK_WIDTH
+    gp = _round_up(g, 8)
+    qp_arr = _pad_dim(_pad_dim(q, 3, dp), 2, gp)
+    q_pos_p = _pad_dim(q_pos, 1, gp, -1)          # pad rows fully masked
+    out = flash_kernel.flash_attention_paged_quantized(
+        qp_arr, k_pool, k_scale[..., 0], v_pool, v_scale[..., 0],
+        pool_pos, block_tables, q_pos_p,
+        d=d, n_bits=n_bits, causal=causal, window=window,
+        interpret=(impl == "interpret"))
+    return out[:, :, :g, :d]

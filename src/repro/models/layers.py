@@ -145,6 +145,25 @@ def apply_rope(x: jax.Array, positions: jax.Array, cfg: ModelConfig):
 # Attention (GQA, causal, sliding-window, cross; direct + online-softmax)
 # ---------------------------------------------------------------------------
 
+def _read_quantized_kv(qg, ck, cks, cv, cvs, qp, kv_pos, *,
+                       d, causal, window):
+    """Attend over a packed bipolar KV cache: fold heads into batch and
+    let the ops dispatch pick the dequant-on-read kernel
+    (pallas/interpret) or the jnp recovery path (reference).
+
+    ``qg (B, Hk, G, d)`` grouped queries; ``ck/cv (B, T, Hk, bits, Dw)``
+    planes with ``cks/cvs (B, T, Hk, 1)`` scales; ``qp (B, G)`` /
+    ``kv_pos (B, T)``.  Returns ``(B, Hk, G, d)``.
+    """
+    b, hk, gs, _ = qg.shape
+    return ops.kv_cache_attention(
+        qg.reshape(b * hk, gs, d),
+        ops.fold_kv_heads(ck), ops.fold_kv_heads(cks),
+        ops.fold_kv_heads(cv), ops.fold_kv_heads(cvs),
+        jnp.repeat(qp, hk, 0), jnp.repeat(kv_pos, hk, 0),
+        d=d, causal=causal, window=window).reshape(b, hk, gs, d)
+
+
 def attention_init(key, cfg: ModelConfig, cross: bool = False) -> dict:
     d, dh = cfg.d_model, cfg.head_dim
     kq, kk, kv, ko = jax.random.split(key, 4)
@@ -260,6 +279,38 @@ def attention_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
 
     new_cache = None
     quant_kv = None           # (k_packed, k_scale, v_packed, v_scale) folded
+    if cache is not None and "block_tables" in cache:
+        # paged decode: the cache is a block pool shared by every request
+        # (k/v (n_blocks, bs, H, kv_bits, Dw) planes + scales), addressed
+        # through this batch's block table.  Append the new token at
+        # (table[length // bs], length % bs), then attend through the
+        # table (ops.paged_kv_cache_attention).  Decode-only: prefill
+        # fills pool blocks by copying a contiguous B=1 cache
+        # (serving.paged_cache.PagedKVPool.write_prefill).
+        assert s == 1, "paged cache is a decode path (one token per step)"
+        kv_bits = cache["k"].shape[-2]
+        blk = cache["k"].shape[1]
+        bt, ln = cache["block_tables"], cache["length"]
+        k_q, k_s = ops.quantize_kv(k, kv_bits)
+        v_q, v_s = ops.quantize_kv(v, kv_bits)
+        phys = jnp.take_along_axis(bt, (ln // blk)[:, None], 1)[:, 0]
+        off = ln % blk
+        ck = cache["k"].at[phys, off].set(k_q[:, 0])
+        cks = cache["k_scale"].at[phys, off].set(k_s[:, 0])
+        cv = cache["v"].at[phys, off].set(v_q[:, 0])
+        cvs = cache["v_scale"].at[phys, off].set(v_s[:, 0])
+        cpos = cache["pos"].at[phys, off].set(pos2d[:, 0].astype(jnp.int32))
+        new_cache = dict(cache, k=ck, v=cv, k_scale=cks, v_scale=cvs,
+                         pos=cpos)
+        qg = q.reshape(b, s, hk, g, dh).transpose(0, 2, 3, 1, 4).reshape(
+            b, hk, g * s, dh)
+        qp = jnp.repeat(pos2d[:, None, :], g, 1).reshape(b, g * s)
+        o = ops.paged_kv_cache_attention(
+            qg, ck, cks, cv, cvs, cpos, bt, qp,
+            d=dh, causal=causal, window=cfg.window)
+        o = o.reshape(b, hk, g, s, dh).transpose(0, 3, 1, 2, 4).reshape(
+            b, s, h * dh).astype(x.dtype)
+        return linear_apply(params["wo"], o, quant=quant), new_cache
     if cache is not None:
         kv_bits = cache["k"].shape[-2] if "k_scale" in cache else None
         cache_len = cache["k"].shape[1]
@@ -319,19 +370,9 @@ def attention_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
         b, hk, g * s, dh)
     qp = jnp.repeat(pos2d[:, None, :], g, 1).reshape(b, g * s)
     if quant_kv is not None:
-        # bipolar-quantized cache read: fold heads into batch and let the
-        # ops dispatch pick the dequant-on-read kernel (pallas/interpret)
-        # or the jnp recovery path (reference)
         ck, cks, cv, cvs = quant_kv
-        t = ck.shape[1]
-        fold_kv = lambda a: a.transpose((0, 2, 1) + tuple(
-            range(3, a.ndim))).reshape((b * hk, t) + a.shape[3:])
-        o = ops.kv_cache_attention(
-            qg.reshape(b * hk, g * s, dh),
-            fold_kv(ck), fold_kv(cks), fold_kv(cv), fold_kv(cvs),
-            jnp.repeat(qp, hk, 0), jnp.repeat(kv_pos, hk, 0),
-            d=dh, causal=causal, window=cfg.window).reshape(
-                b, hk, g * s, dh)
+        o = _read_quantized_kv(qg, ck, cks, cv, cvs, qp, kv_pos,
+                               d=dh, causal=causal, window=cfg.window)
     else:
         kt = k.transpose(0, 2, 1, 3)
         vt = v.transpose(0, 2, 1, 3)
@@ -356,13 +397,20 @@ def cross_attention_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
 
     Prefill/train: ``memory (B, T, d)`` given -> project K/V (and fill
     ``cache`` if provided).  Decode: ``memory=None`` -> replay cached
-    projected K/V (the encoder is NOT re-run per token).
+    projected K/V (the encoder is NOT re-run per token).  A quantized
+    cache (``k_scale`` present, :func:`make_cross_cache` with
+    ``kv_bits``) stores packed bipolar planes on fill and decodes
+    through :func:`repro.kernels.ops.kv_cache_attention`.
     Returns ``(out, new_cache)``.
     """
     b, s, _ = x.shape
     h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     g = h // hk
     q = linear_apply(params["wq"], x, quant=quant).reshape(b, s, h, dh)
+    qg = q.reshape(b, s, hk, g, dh).transpose(0, 2, 3, 1, 4).reshape(
+        b, hk, g * s, dh)
+    qp = jnp.zeros((b, g * s), jnp.int32)   # positions unused (non-causal)
+    quant_kv = None           # (k, k_scale, v, v_scale) packed planes
     if memory is not None:
         t = memory.shape[1]
         k = linear_apply(params["wk"], memory, quant=quant).reshape(
@@ -372,17 +420,34 @@ def cross_attention_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
         kv_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
         new_cache = None
         if cache is not None:
-            new_cache = dict(cache, k=k.astype(cache["k"].dtype),
-                             v=v.astype(cache["v"].dtype), pos=kv_pos)
+            kv_bits = cache["k"].shape[-2] if "k_scale" in cache else None
+            if kv_bits:
+                # attend through the quantized planes even in prefill so
+                # every position sees the same precision as decode (the
+                # recompute-reproduces-identical-tokens invariant)
+                ck, cks = ops.quantize_kv(k, kv_bits)
+                cv, cvs = ops.quantize_kv(v, kv_bits)
+                quant_kv = (ck, cks, cv, cvs)
+                new_cache = dict(cache, k=ck, v=cv, k_scale=cks,
+                                 v_scale=cvs, pos=kv_pos)
+            else:
+                new_cache = dict(cache, k=k.astype(cache["k"].dtype),
+                                 v=v.astype(cache["v"].dtype), pos=kv_pos)
     else:
         assert cache is not None, "cross decode needs a filled cross cache"
-        k, v, kv_pos, new_cache = cache["k"], cache["v"], cache["pos"], cache
-    qg = q.reshape(b, s, hk, g, dh).transpose(0, 2, 3, 1, 4).reshape(
-        b, hk, g * s, dh)
-    qp = jnp.zeros((b, g * s), jnp.int32)   # positions unused (non-causal)
-    chunked = (s > 1) and (k.shape[1] > ATTN_CHUNK_THRESHOLD)
-    o = _attn_core(qg, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
-                   qp, kv_pos, causal=False, window=None, chunked=chunked)
+        new_cache, kv_pos = cache, cache["pos"]
+        if "k_scale" in cache:
+            quant_kv = (cache["k"], cache["k_scale"],
+                        cache["v"], cache["v_scale"])
+        else:
+            k, v = cache["k"], cache["v"]
+    if quant_kv is not None:
+        o = _read_quantized_kv(qg, *quant_kv, qp, kv_pos,
+                               d=dh, causal=False, window=None)
+    else:
+        chunked = (s > 1) and (k.shape[1] > ATTN_CHUNK_THRESHOLD)
+        o = _attn_core(qg, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+                       qp, kv_pos, causal=False, window=None, chunked=chunked)
     o = o.reshape(b, hk, g, s, dh).transpose(0, 3, 1, 2, 4).reshape(
         b, s, h * dh).astype(x.dtype)
     return linear_apply(params["wo"], o, quant=quant), new_cache
@@ -421,13 +486,28 @@ def make_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
     return cache
 
 
-def make_cross_cache(cfg: ModelConfig, batch: int, enc_len: int,
-                     dtype) -> dict:
-    return {
-        "k": jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dtype),
-        "v": jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dtype),
-        "pos": jnp.full((batch, enc_len), -1, jnp.int32),
-    }
+def make_cross_cache(cfg: ModelConfig, batch: int, enc_len: int, dtype,
+                     kv_bits: Optional[int] = None) -> dict:
+    """Enc-dec cross-K/V cache (projected encoder memory, replayed every
+    decode step).  With ``kv_bits`` the cache stores packed bipolar-INT
+    planes + per-(token, head) scales, same format as the self-attention
+    KV cache -- the cross stream is read every decode step, so its HBM
+    traffic scales with bits/element too."""
+    kv_bits = cfg.kv_bits if kv_bits is None else kv_bits
+    shape = (batch, enc_len, cfg.n_kv_heads, cfg.head_dim)
+    cache = {"pos": jnp.full((batch, enc_len), -1, jnp.int32)}
+    if kv_bits:
+        assert 1 <= kv_bits <= 8, f"kv_bits={kv_bits} outside 1..8"
+        from repro.core import bipolar
+        packed = shape[:3] + (kv_bits, bipolar.packed_words(cfg.head_dim))
+        cache["k"] = jnp.zeros(packed, jnp.uint32)
+        cache["v"] = jnp.zeros(packed, jnp.uint32)
+        cache["k_scale"] = jnp.zeros(shape[:3] + (1,), jnp.float32)
+        cache["v_scale"] = jnp.zeros(shape[:3] + (1,), jnp.float32)
+    else:
+        cache["k"] = jnp.zeros(shape, dtype)
+        cache["v"] = jnp.zeros(shape, dtype)
+    return cache
 
 
 # ---------------------------------------------------------------------------

@@ -172,7 +172,13 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
     """Decode caches: {'prelude': [..], 'blocks': stacked-unit caches,
     ['cross': stacked per-unit cross-KV]}.  ``enc_len`` (audio): encoder
     memory length for the projected cross-K/V cache.  ``quant``: its
-    ``kv_bits`` (over ``cfg.kv_bits``) selects packed bipolar KV caches."""
+    ``kv_bits`` (over ``cfg.kv_bits``) selects packed bipolar KV caches
+    (self- AND cross-attention).
+
+    The paged serving pool reuses this layout with ``batch=n_blocks,
+    max_len=block_size``: every leaf's leading (batch, length) dims
+    become (block, in-block slot) and requests address blocks through
+    per-request block tables (:mod:`repro.serving.paged_cache`)."""
     from repro.models.config import effective_kv_bits
     dt = jnp.dtype(cfg.dtype)
     kvb = effective_kv_bits(cfg, quant)
@@ -191,7 +197,7 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
         if enc_len is None:
             from repro.launch.specs import enc_len as _el
             enc_len = _el(cfg, max_len)
-        xc = [[L.make_cross_cache(cfg, batch, enc_len, dt)
+        xc = [[L.make_cross_cache(cfg, batch, enc_len, dt, kv_bits=kvb)
                for _ in unit_plan] for _ in range(n_units)]
         caches["cross"] = jax.tree.map(lambda *xs: jnp.stack(xs), *xc)
     return caches

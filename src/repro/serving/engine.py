@@ -1,11 +1,24 @@
-"""Serving runtime: prefill/decode steps and a continuous-batching engine.
+"""Serving runtime: prefill/decode steps and continuous-batching engines.
 
 The jitted steps are the units the dry-run lowers (``serve_step`` = one new
 token against a KV cache of the cell's sequence length).  The engine wraps
-them with slot-based continuous batching: a fixed decode batch of ``B``
-slots, each slot independently holding one request's KV state; finished
-slots are refilled from the queue without stopping the other slots
-(per-slot cache write indices -- see ``make_kv_cache``).
+them with continuous batching in one of two memory regimes:
+
+* **contiguous** (``paged=False``): a fixed decode batch of ``n_slots``
+  lanes, each lane owning one request's ``(max_len,)`` KV slab; finished
+  lanes are refilled from the queue without stopping the others.
+* **paged** (``paged=True``): requests share a block pool of packed
+  bipolar-INT KV planes (:mod:`repro.serving.paged_cache`) addressed
+  through per-request block tables, scheduled by
+  :mod:`repro.serving.scheduler` -- FCFS admission gated on free blocks,
+  decode batches bucketed to powers of two, preemption-by-eviction when
+  the pool runs dry.  Capacity scales with tokens actually resident x
+  ``kv_bits``/16, not ``n_slots x max_len``.
+
+Prefill always runs per-request at B=1, with the prompt *bucketed to the
+next power of two* (padded tokens carry position -1 and are masked out of
+every attention read), so a stream of varied prompt lengths compiles
+O(log max_len) programs instead of one per distinct length.
 
 Serving uses quantized packed weights (the paper's technique); pass
 ``quant=cfg.quant`` after :func:`repro.models.model.quantize_params`.
@@ -43,6 +56,27 @@ def prefill_step(params, batch: dict, caches, cfg: ModelConfig,
         frames=batch.get("frames"),
         caches=caches, quant=quant, remat=False, logits_mode="last")
     return logits, caches
+
+
+@partial(jax.jit, static_argnames=("cfg", "quant"))
+def prefill_step_bucketed(params, batch: dict, caches, cfg: ModelConfig,
+                          quant: Optional[QuantConfig] = None):
+    """Prefill a length-bucketed prompt: tokens are padded past the real
+    length (pad positions -1, masked everywhere) and the logits are taken
+    at ``batch["last_idx"]`` (B,) -- the last *real* token -- instead of
+    the last padded position.  Jits once per bucket, not per length.
+    """
+    x, caches, _ = M.forward(
+        params, batch["tokens"], cfg,
+        positions=batch.get("positions"),
+        patch_embeds=batch.get("patch_embeds"),
+        frames=batch.get("frames"),
+        caches=caches, quant=quant, remat=False, logits_mode="none")
+    idx = batch["last_idx"].astype(jnp.int32)           # (B,)
+    xl = jnp.take_along_axis(
+        x, idx[:, None, None].astype(jnp.int32), axis=1)  # (B, 1, d)
+    logits = M._logits(params, xl, cfg, quant)
+    return logits[:, 0], caches
 
 
 @partial(jax.jit, static_argnames=("cfg", "quant"))
@@ -89,16 +123,36 @@ def sample(logits: jax.Array, *, temperature: float = 0.0,
     return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
 
 
+def _next_pow2(n: int, floor: int = 1) -> int:
+    p = floor
+    while p < n:
+        p *= 2
+    return p
+
+
+def prefill_bucket(s: int, cap: int, floor: int = 8) -> int:
+    """Bucket a prompt length to the next power of two (>= ``floor``,
+    capped at ``cap`` = the cache ring length): a stream of varied
+    prompt lengths compiles O(log cap) prefill programs.  Lengths at or
+    beyond the ring stay exact -- padding past the ring would evict
+    real in-window tokens through the SWA tail-store path."""
+    if s >= cap:
+        return s
+    return min(_next_pow2(s, floor), cap)
+
+
 # ---------------------------------------------------------------------------
-# Continuous-batching engine
+# Requests and per-request state
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class Request:
     prompt: np.ndarray              # (s,) int32
     max_new_tokens: int = 16
+    temperature: float = 0.0        # 0 = greedy
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    error: Optional[str] = None     # set on clean rejection (paged)
 
 
 def _tree_write_slot(batched, single, slot: int):
@@ -120,87 +174,274 @@ def _tree_write_slot(batched, single, slot: int):
 
 
 class Engine:
-    """Slot-based continuous batching over the jitted steps.
+    """Continuous batching over the jitted steps (contiguous or paged).
 
-    Each of the ``n_slots`` decode lanes owns one request at a time.
-    Prefill runs per-request at B=1 (bucketed to ``prefill_len``) and the
-    resulting KV state is scattered into the lane's slice of the batched
-    cache; decode advances all active lanes in lock-step.
+    Contiguous: each of the ``n_slots`` decode lanes owns one request at
+    a time; prefill runs per-request at B=1 (bucketed, see
+    :func:`prefill_bucket`) and the resulting KV state is scattered into
+    the lane's slice of the batched cache; decode advances all active
+    lanes in lock-step.
+
+    Paged (``paged=True``, requires ``kv_bits``): requests share a
+    :class:`~repro.serving.paged_cache.PagedKVPool` of ``n_blocks``
+    blocks x ``block_size`` tokens, run under the
+    :class:`~repro.serving.scheduler.Scheduler`, and the decode batch is
+    whatever is running, padded to the next power-of-two bucket
+    (<= ``max_batch``) to bound recompiles.  Greedy decode is
+    token-identical to the contiguous engine at equal ``kv_bits``.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
-                 max_len: int = 256, quant: Optional[QuantConfig] = None):
+                 max_len: int = 256, quant: Optional[QuantConfig] = None,
+                 paged: bool = False, block_size: int = 16,
+                 n_blocks: Optional[int] = None,
+                 max_batch: Optional[int] = None):
         self.params, self.cfg, self.quant = params, cfg, quant
         self.n_slots, self.max_len = n_slots, max_len
-        self.caches = M.init_caches(cfg, n_slots, max_len, quant=quant)
-        self.slot_req: list[Optional[Request]] = [None] * n_slots
-        self.lengths = np.zeros(n_slots, np.int32)     # tokens seen per slot
-        self.last_tok = np.zeros(n_slots, np.int32)    # next input token
-        self.queue: list[Request] = []
+        self.paged = paged
         self.steps = 0
+        self._rng = np.random.default_rng(0)
+        if paged:
+            from repro.serving.paged_cache import PagedKVPool
+            from repro.serving.scheduler import Scheduler
+            assert max_len % block_size == 0, (max_len, block_size)
+            # SWA rings shorter than max_len wrap during prefill, breaking
+            # write_prefill's slot-i-holds-token-i copy; until the pool
+            # learns to drop out-of-window blocks, paged serving requires
+            # the full window to fit (ROADMAP open item)
+            assert cfg.window is None or cfg.window >= max_len, \
+                f"paged serving needs window ({cfg.window}) >= " \
+                f"max_len ({max_len})"
+            if n_blocks is None:
+                # same token capacity as the n_slots contiguous engine,
+                # plus the reserved null block
+                n_blocks = n_slots * (max_len // block_size) + 1
+            self.max_batch = max_batch or 2 * n_slots
+            self.pool = PagedKVPool(cfg, n_blocks, block_size, quant=quant)
+            self.scheduler = Scheduler(self.pool, max_len=max_len,
+                                       max_batch=self.max_batch)
+            self.n_batch_blocks = max_len // block_size   # table width
+        else:
+            self.caches = M.init_caches(cfg, n_slots, max_len, quant=quant)
+            self.slot_req: list = [None] * n_slots   # SequenceState per lane
+            self.queue: list[Request] = []
 
     # -- request lifecycle -------------------------------------------------
     def submit(self, req: Request):
-        self.queue.append(req)
+        if self.paged:
+            self.scheduler.submit(req)
+        else:
+            self.queue.append(req)
 
     def _admit(self):
         for slot in range(self.n_slots):
             if self.slot_req[slot] is None and self.queue:
                 req = self.queue.pop(0)
                 self._prefill_into(req, slot)
-                self.slot_req[slot] = req
 
-    def _prefill_into(self, req: Request, slot: int):
-        s = len(req.prompt)
+    # -- shared bucketed B=1 prefill ---------------------------------------
+    def _bucketed_prefill(self, prompt: np.ndarray):
+        """Prefill one prompt at B=1 with length bucketing.
+
+        Returns ``(logits (1, V) at the last real token, filled B=1
+        cache)``.  Pad tokens carry position -1: they are masked out of
+        every attention read and land in the cache as invalid slots that
+        decode immediately overwrites (the ring index is rewound to the
+        real length below).  SSM/hybrid archs prefill at exact length --
+        the recurrence consumes every input regardless of position, so
+        pads would corrupt the cached state (one jit per length; the
+        bucketing win applies to the attention engines).
+        """
+        s = len(prompt)
+        bucketable = all(self.cfg.layer_kind(i) == "attn"
+                         for i in range(self.cfg.n_layers))
+        ring = min(self.max_len, self.cfg.window) if self.cfg.window \
+            else self.max_len
+        p = prefill_bucket(s, ring) if bucketable else s
         one = M.init_caches(self.cfg, 1, self.max_len, quant=self.quant)
-        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
+        toks = np.zeros(p, np.int32)
+        toks[:s] = np.asarray(prompt, np.int32)
+        pos = np.full(p, -1, np.int32)
+        pos[:s] = np.arange(s)
+        batch = {"tokens": jnp.asarray(toks)[None],
+                 "positions": jnp.asarray(pos)[None],
+                 "last_idx": jnp.asarray([s - 1], jnp.int32)}
         if self.cfg.family == "vlm":
             batch["positions"] = jnp.broadcast_to(
-                jnp.arange(s, dtype=jnp.int32), (3, 1, s))
+                jnp.asarray(pos)[None, None], (3, 1, p))
             batch["patch_embeds"] = jnp.zeros(
-                (1, min(self.cfg.n_patches, s), self.cfg.d_model),
+                (1, min(self.cfg.n_patches, p), self.cfg.d_model),
                 jnp.dtype(self.cfg.dtype))
         if self.cfg.family == "audio":
             from repro.launch.specs import enc_len
             batch["frames"] = jnp.zeros(
-                (1, enc_len(self.cfg, s), self.cfg.frontend_dim),
+                (1, enc_len(self.cfg, p), self.cfg.frontend_dim),
                 jnp.dtype(self.cfg.dtype))
-        logits, one = prefill_step(self.params, batch, one, self.cfg,
-                                   self.quant)
-        self.caches = _tree_write_slot(self.caches, one, slot)
-        self.lengths[slot] = s
-        self.last_tok[slot] = int(np.argmax(np.asarray(logits[0])))
-        req.out.append(int(self.last_tok[slot]))
+        logits, one = prefill_step_bucketed(self.params, batch, one,
+                                            self.cfg, self.quant)
+        return logits, self._rewind_ring_index(one, s, p)
 
-    # -- decode loop --------------------------------------------------------
-    def step(self):
-        """One batched decode step across all active slots."""
+    @staticmethod
+    def _rewind_ring_index(caches, s: int, p: int):
+        """Point each KV ring's write index at the first *pad* slot.
+
+        The prefill write advanced ``index`` by the padded length ``p``;
+        left alone, decode would skip the ``p - s`` pad slots (wasting
+        ring capacity) or -- when ``p`` wraps the ring -- overwrite live
+        prompt KV.  The first pad sits at ``s`` (normal write) or
+        ``s - (p - ring)`` (SWA tail store keeps the last ``ring``
+        entries), i.e. ``(s - max(0, p - ring)) % ring``.
+        """
+        def fix(c):
+            if not (isinstance(c, dict) and "index" in c and "pos" in c):
+                return c
+            ring = c["pos"].shape[-1]
+            idx = (s - max(0, p - ring)) % ring
+            return dict(c, index=jnp.full_like(c["index"], idx))
+
+        out = dict(caches)
+        for key in ("prelude", "blocks"):
+            if key in out:
+                out[key] = [fix(c) for c in out[key]]
+        return out
+
+    def _sample_token(self, row_logits: np.ndarray, temperature: float) -> int:
+        if temperature <= 0.0:
+            return int(np.argmax(row_logits))
+        z = row_logits.astype(np.float64) / temperature
+        z -= z.max()
+        probs = np.exp(z) / np.exp(z).sum()
+        return int(self._rng.choice(len(probs), p=probs))
+
+    # -- contiguous path ----------------------------------------------------
+    def _prefill_into(self, req: Request, slot: int):
+        from repro.serving.scheduler import SequenceState
+        logits, one = self._bucketed_prefill(req.prompt)
+        self.caches = _tree_write_slot(self.caches, one, slot)
+        seq = SequenceState(req=req, length=len(req.prompt))
+        seq.last_tok = self._sample_token(
+            np.asarray(logits[0], np.float32), req.temperature)
+        req.out.append(seq.last_tok)
+        self.slot_req[slot] = seq
+
+    def _contiguous_step(self) -> bool:
         self._admit()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return False
-        toks = jnp.asarray(self.last_tok, jnp.int32)[:, None]
-        pos = jnp.asarray(self.lengths, jnp.int32)[:, None]
+        toks = np.zeros(self.n_slots, np.int32)
+        pos = np.zeros(self.n_slots, np.int32)
+        for slot, seq in enumerate(self.slot_req):
+            if seq is not None:
+                toks[slot], pos[slot] = seq.last_tok, seq.length
+        toks = jnp.asarray(toks)[:, None]
+        pos = jnp.asarray(pos)[:, None]
         if self.cfg.family == "vlm":
             pos = jnp.broadcast_to(pos[None], (3, self.n_slots, 1))
         batch = {"tokens": toks, "positions": pos}
         logits, self.caches = serve_step(self.params, batch, self.caches,
                                          self.cfg, self.quant)
-        nxt = np.array(sample(logits))  # writable copy
+        logits = np.asarray(logits, np.float32)
         self.steps += 1
         for slot in active:
-            req = self.slot_req[slot]
-            req.out.append(int(nxt[slot]))
-            self.lengths[slot] += 1
-            if len(req.out) >= req.max_new_tokens \
-                    or self.lengths[slot] >= self.max_len - 1:
-                req.done = True
+            seq = self.slot_req[slot]
+            seq.last_tok = self._sample_token(logits[slot], seq.temperature)
+            seq.req.out.append(seq.last_tok)
+            seq.length += 1
+            if len(seq.req.out) >= seq.req.max_new_tokens \
+                    or seq.length >= self.max_len - 1:
+                seq.req.done = True
                 self.slot_req[slot] = None
-        self.last_tok = nxt
         return True
 
+    # -- paged path ----------------------------------------------------------
+    def _paged_prefill(self, seq, tokens: np.ndarray):
+        """Scheduler admission callback: prefill ``tokens`` contiguously
+        at B=1, copy the packed planes into the request's pool blocks."""
+        s = len(tokens)
+        logits, one = self._bucketed_prefill(tokens)
+        self.pool.write_prefill(one, seq.blocks, s)
+        seq.length = s
+        if seq.req.out:
+            # re-admission after preemption: the pending input token is
+            # already known; the recomputed logits would reproduce it
+            seq.last_tok = seq.req.out[-1]
+        else:
+            seq.last_tok = self._sample_token(
+                np.asarray(logits[0], np.float32), seq.temperature)
+            seq.req.out.append(seq.last_tok)
+
+    def _decode_bucket(self, n: int) -> int:
+        return min(_next_pow2(n), self.max_batch)
+
+    def _paged_step(self) -> bool:
+        sch = self.scheduler
+        sch.admit(self._paged_prefill)
+        if not sch.running:
+            return False
+        sch.ensure_append_capacity()
+        running = sch.running
+        bb = self._decode_bucket(len(running))
+        # bucket the table width too: the paged kernel's grid walks one
+        # iteration per table entry, so a full-width (max_len/block_size)
+        # table would make every decode step pay for the longest possible
+        # sequence -- exactly the over-allocation paging removes
+        nb = min(_next_pow2(max(len(s.blocks) for s in running)),
+                 self.n_batch_blocks)
+        toks = np.zeros(bb, np.int32)
+        pos = np.full(bb, -1, np.int32)       # pad lanes: masked everywhere
+        lens = np.zeros(bb, np.int32)
+        tables = np.zeros((bb, nb), np.int32)  # 0 = the null block
+        for i, seq in enumerate(running):
+            toks[i], pos[i], lens[i] = seq.last_tok, seq.length, seq.length
+            tables[i, :len(seq.blocks)] = seq.blocks
+        jpos = jnp.asarray(pos)[:, None]
+        if self.cfg.family == "vlm":
+            jpos = jnp.broadcast_to(jpos[None], (3, bb, 1))
+        batch = {"tokens": jnp.asarray(toks)[:, None], "positions": jpos}
+        caches = self.pool.step_caches(tables, lens)
+        logits, caches = serve_step(self.params, batch, caches,
+                                    self.cfg, self.quant)
+        self.pool.absorb(caches)
+        logits = np.asarray(logits, np.float32)
+        self.steps += 1
+        for i, seq in enumerate(list(running)):
+            seq.last_tok = self._sample_token(logits[i], seq.temperature)
+            seq.req.out.append(seq.last_tok)
+            seq.length += 1
+            if len(seq.req.out) >= seq.req.max_new_tokens \
+                    or seq.length >= self.max_len - 1:
+                sch.finish(seq)
+        return True
+
+    # -- decode loop --------------------------------------------------------
+    def step(self) -> bool:
+        """One batched decode step across all active requests."""
+        return self._paged_step() if self.paged else self._contiguous_step()
+
     def run(self, max_steps: int = 10_000):
-        while (self.queue or any(r is not None for r in self.slot_req)) \
-                and self.steps < max_steps:
+        while self.steps < max_steps and self._has_work():
             if not self.step():
                 break
+
+    def _has_work(self) -> bool:
+        if self.paged:
+            return self.scheduler.has_work
+        return bool(self.queue) or any(r is not None for r in self.slot_req)
+
+    def report(self) -> dict:
+        """Occupancy snapshot (paged: pool accounting; contiguous: lanes)."""
+        if self.paged:
+            rep = self.pool.report(
+                tokens_resident=self.scheduler.tokens_resident())
+            rep.update(running=len(self.scheduler.running),
+                       waiting=len(self.scheduler.waiting),
+                       preemptions=self.scheduler.n_preemptions,
+                       rejections=self.scheduler.n_rejections)
+            return rep
+        active = sum(r is not None for r in self.slot_req)
+        return dict(n_slots=self.n_slots, running=active,
+                    waiting=len(self.queue),
+                    pool_bytes=kv_cache_bytes(self.caches),
+                    tokens_resident=sum(r.length for r in self.slot_req
+                                        if r is not None))

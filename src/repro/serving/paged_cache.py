@@ -1,0 +1,223 @@
+"""Paged block pool over packed bipolar-INT KV planes (serving memory).
+
+The contiguous engine reserves ``max_len`` cache tokens per slot whether
+a request is 8 tokens or 8k, so the 2x-16x payload savings of ``kv_bits``
+is eaten by over-allocation.  This module turns the quantized KV cache
+into a *block pool* (the TensorRT-LLM paged-KV design adapted to our
+pallas|interpret|reference kernel contract): fixed-size token blocks
+shared by every request and every layer, addressed through per-request
+block tables.  Concurrent requests then scale with *tokens actually
+resident x bits/element*, not ``n_slots x max_len x 16``.
+
+Layout.  The pool reuses :func:`repro.models.model.init_caches` with
+``batch=n_blocks, max_len=block_size``: every attention cache leaf's
+leading (batch, length) dims become (physical block, in-block slot) --
+``k``/``v`` are ``(n_blocks, block_size, H, kv_bits, D/32)`` uint32 bit
+planes (stacked scan units carry a leading ``n_units`` dim), scales are
+``(n_blocks, block_size, H, 1)`` f32 and ``pos`` is ``(n_blocks,
+block_size)`` int32.  One *logical* block id addresses the same physical
+index in every layer's pool, so a request owns a single block table.
+
+Block 0 is the reserved **null block**: never allocated, its positions
+stay -1, and block-table padding points at it -- a padded or inactive
+lane therefore reads only masked slots and contributes exactly 0.
+
+Invariants the pool maintains:
+* freshly allocated blocks have all positions reset to -1 (stale
+  positions from a freed request could otherwise pass the causal mask);
+* prefill copies a contiguous B=1 cache's packed planes verbatim
+  (:meth:`PagedKVPool.write_prefill`), so paged decode is token-identical
+  to the contiguous engine at equal ``kv_bits``;
+* decode steps receive the pool with this batch's ``block_tables`` /
+  ``length`` injected per layer (:meth:`step_caches`) and give updated
+  pool leaves back through :meth:`absorb`.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ModelConfig, QuantConfig, effective_kv_bits
+
+_KV_KEYS = ("k", "v", "k_scale", "v_scale", "pos")
+
+
+def supports_paging(cfg: ModelConfig) -> bool:
+    """Paged serving needs every mixer to own a pageable KV stream:
+    attention-only decoders (dense/moe/vlm).  SSM/hybrid state and
+    enc-dec cross caches are fixed-size per request -- nothing to page
+    (ROADMAP open item)."""
+    return (cfg.family != "audio"
+            and all(cfg.layer_kind(i) == "attn"
+                    for i in range(cfg.n_layers)))
+
+
+class PagedKVPool:
+    """Fixed-size-block pool of packed bipolar KV planes + a free list.
+
+    ``n_blocks`` counts physical blocks *including* the reserved null
+    block 0; capacity available to requests is ``n_usable = n_blocks-1``
+    blocks of ``block_size`` tokens each.
+    """
+
+    def __init__(self, cfg: ModelConfig, n_blocks: int, block_size: int,
+                 quant: Optional[QuantConfig] = None):
+        assert supports_paging(cfg), \
+            f"paged KV pool needs an attention-only decoder, got {cfg.family}"
+        kv_bits = effective_kv_bits(cfg, quant)
+        assert kv_bits, "the paged pool stores packed bipolar planes: " \
+            "set kv_bits (QuantConfig.kv_bits or ModelConfig.kv_bits)"
+        assert n_blocks >= 2, "need at least the null block + one usable"
+        if cfg.window:
+            assert block_size <= cfg.window, (block_size, cfg.window)
+        self.cfg, self.quant = cfg, quant
+        self.kv_bits = kv_bits
+        self.n_blocks, self.block_size = n_blocks, block_size
+        self.caches = M.init_caches(cfg, n_blocks, block_size, quant=quant)
+        # LIFO free list, block 0 reserved as the null block
+        self._free = list(range(n_blocks - 1, 0, -1))
+
+    # -- accounting ----------------------------------------------------------
+    @property
+    def n_usable(self) -> int:
+        return self.n_blocks - 1
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.n_usable - len(self._free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def report(self, tokens_resident: Optional[int] = None) -> dict:
+        """Occupancy / fragmentation accounting (kv_cache_bytes-style).
+
+        ``tokens_resident``: total tokens currently cached across
+        requests (the scheduler knows; the pool only sees blocks).
+        Internal fragmentation = allocated-but-empty token slots as a
+        fraction of allocated slots."""
+        from repro.serving.engine import kv_cache_bytes
+        pool_bytes = kv_cache_bytes(self.caches)
+        payload = kv_cache_bytes(self.caches, payload_only=True)
+        slots = self.used_blocks * self.block_size
+        rep = dict(
+            n_blocks=self.n_blocks, block_size=self.block_size,
+            kv_bits=self.kv_bits,
+            n_usable=self.n_usable, free_blocks=self.free_blocks,
+            used_blocks=self.used_blocks,
+            pool_bytes=int(pool_bytes), payload_bytes=int(payload),
+            bytes_per_block=int(pool_bytes / max(self.n_blocks, 1)),
+            occupancy=self.used_blocks / max(self.n_usable, 1),
+        )
+        if tokens_resident is not None:
+            rep["tokens_resident"] = int(tokens_resident)
+            rep["fragmentation"] = (
+                1.0 - tokens_resident / slots if slots else 0.0)
+        return rep
+
+    # -- alloc / free --------------------------------------------------------
+    def alloc(self, n: int) -> list:
+        """Pop ``n`` physical blocks and reset their positions to -1."""
+        if n > len(self._free):
+            raise RuntimeError(
+                f"pool exhausted: want {n} blocks, {len(self._free)} free")
+        ids = [self._free.pop() for _ in range(n)]
+        self._reset_pos(ids)
+        return ids
+
+    def free(self, ids) -> None:
+        self._free.extend(ids)
+
+    # -- tree plumbing -------------------------------------------------------
+    def _attn_caches(self, caches=None):
+        """Yield ``(cache_dict, stacked)`` for every attention layer;
+        stacked leaves carry a leading ``n_units`` scan dim."""
+        caches = self.caches if caches is None else caches
+        for c in caches.get("prelude", []):
+            yield c, False
+        for c in caches["blocks"]:
+            yield c, True
+
+    def _reset_pos(self, ids) -> None:
+        idx = jnp.asarray(ids, jnp.int32)
+        for c, stacked in self._attn_caches():
+            if stacked:
+                c["pos"] = c["pos"].at[:, idx].set(-1)
+            else:
+                c["pos"] = c["pos"].at[idx].set(-1)
+
+    def write_prefill(self, single, block_ids, n_tokens: int) -> None:
+        """Copy a prefilled contiguous B=1 cache into pool blocks.
+
+        ``single``: the cache tree from ``init_caches(cfg, 1, L)`` after
+        a prefill of ``n_tokens`` (its packed planes are bit-identical
+        to what paged decode would have appended, which is what makes
+        paged vs contiguous token-identical).  Slots past ``n_tokens``
+        copy over as pos=-1 (bucketing pads / untouched init) and stay
+        masked until decode overwrites them.
+        """
+        nb = len(block_ids)
+        bs = self.block_size
+        assert nb == self.blocks_for(max(n_tokens, 1)), (nb, n_tokens)
+        idx = jnp.asarray(block_ids, jnp.int32)
+
+        def copy(pool_leaf, single_leaf, stacked):
+            if stacked:
+                u = pool_leaf.shape[0]
+                assert single_leaf.shape[2] >= nb * bs, \
+                    "prefill cache shorter than the allocated blocks"
+                src = single_leaf[:, 0, :nb * bs].reshape(
+                    (u, nb, bs) + single_leaf.shape[3:])
+                return pool_leaf.at[:, idx].set(src.astype(pool_leaf.dtype))
+            assert single_leaf.shape[1] >= nb * bs
+            src = single_leaf[0, :nb * bs].reshape(
+                (nb, bs) + single_leaf.shape[2:])
+            return pool_leaf.at[idx].set(src.astype(pool_leaf.dtype))
+
+        for (pc, stacked), (sc, _) in zip(self._attn_caches(),
+                                          self._attn_caches(single)):
+            for key in _KV_KEYS:
+                pc[key] = copy(pc[key], sc[key], stacked)
+
+    def step_caches(self, block_tables: np.ndarray, lengths: np.ndarray):
+        """Pool tree for one decode step: each attention cache dict gains
+        this batch's ``block_tables (B, NB)`` and ``length (B,)`` (stacked
+        layers see them broadcast over the leading ``n_units`` dim)."""
+        bt = jnp.asarray(block_tables, jnp.int32)
+        ln = jnp.asarray(lengths, jnp.int32)
+
+        def aug(c, stacked):
+            if stacked:
+                u = c["k"].shape[0]
+                return dict(c,
+                            block_tables=jnp.broadcast_to(
+                                bt, (u,) + bt.shape),
+                            length=jnp.broadcast_to(ln, (u,) + ln.shape))
+            return dict(c, block_tables=bt, length=ln)
+
+        out = {}
+        if "prelude" in self.caches:
+            out["prelude"] = [aug(c, False)
+                              for c in self.caches["prelude"]]
+        out["blocks"] = [aug(c, True) for c in self.caches["blocks"]]
+        return out
+
+    def absorb(self, new_caches) -> None:
+        """Store updated pool leaves back, stripping the per-step keys."""
+        def strip(c):
+            return {k: v for k, v in c.items()
+                    if k not in ("block_tables", "length")}
+
+        out = {}
+        if "prelude" in new_caches:
+            out["prelude"] = [strip(c) for c in new_caches["prelude"]]
+        out["blocks"] = [strip(c) for c in new_caches["blocks"]]
+        self.caches = out

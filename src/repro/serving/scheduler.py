@@ -1,0 +1,158 @@
+"""Request scheduler for paged continuous batching.
+
+Replaces the fixed-slot admission of the contiguous engine: requests are
+admitted FCFS whenever the block pool can hold their prompt, the decode
+batch is assembled from whatever is running (the engine pads it to
+bucketed batch sizes to bound recompiles), and when the pool runs dry
+mid-decode the *youngest* running request is preempted by eviction --
+its blocks freed, the request re-queued at the front for re-prefill of
+prompt + tokens generated so far (recomputation-style preemption, the
+TensorRT-LLM / vLLM policy that needs no swap space).
+
+Per-request state lives in :class:`SequenceState` objects (not parallel
+numpy arrays): cached length, next input token, owned blocks, sampling
+params.  Liveness guarantee: a request whose lifetime block need exceeds
+the pool is rejected at submit time, so the oldest running request can
+always grow -- preemption of everything younger frees enough blocks --
+and the preemption loop terminates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.serving.paged_cache import PagedKVPool
+
+
+@dataclasses.dataclass(eq=False)       # identity equality: states are
+class SequenceState:                   # removed from lists by object
+    """Mutable per-request decode state (one object per live request)."""
+    req: "Request"                  # repro.serving.engine.Request
+    length: int = 0                 # tokens whose KV is resident
+    last_tok: int = 0               # next input token
+    blocks: list = dataclasses.field(default_factory=list)
+    admitted_at: int = -1           # admission counter (preemption order)
+
+    @property
+    def temperature(self) -> float:
+        return getattr(self.req, "temperature", 0.0)
+
+    def resume_tokens(self) -> np.ndarray:
+        """Tokens to (re-)prefill: the prompt plus every generated token
+        that has already been fed back (all of ``out`` except the last,
+        which is the pending input)."""
+        toks = [np.asarray(self.req.prompt, np.int32)]
+        if self.req.out:
+            toks.append(np.asarray(self.req.out[:-1], np.int32))
+        return np.concatenate(toks)
+
+
+class Scheduler:
+    """FCFS admission + preemption-by-eviction over a :class:`PagedKVPool`.
+
+    The engine drives it: :meth:`admit` before each step (prefilling via
+    the engine's callback), :meth:`ensure_append_capacity` to make room
+    for the step's KV append, then :meth:`finish`/:meth:`reject` as
+    requests complete.
+    """
+
+    def __init__(self, pool: PagedKVPool, *, max_len: int, max_batch: int):
+        self.pool = pool
+        self.max_len, self.max_batch = max_len, max_batch
+        self.waiting: deque = deque()      # of engine.Request
+        self.running: list[SequenceState] = []
+        self.n_preemptions = 0
+        self.n_rejections = 0
+        self._admit_counter = 0
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, req) -> None:
+        """Queue a request; impossible ones are rejected immediately (a
+        request longer than the pool must fail cleanly, never hang)."""
+        worst = len(req.prompt) + req.max_new_tokens
+        if len(req.prompt) >= self.max_len - 1:
+            self.reject(req, f"prompt ({len(req.prompt)} tokens) >= "
+                             f"max_len-1 ({self.max_len - 1})")
+            return
+        need = self.pool.blocks_for(min(worst, self.max_len))
+        if need > self.pool.n_usable:
+            self.reject(req, f"needs {need} blocks at its longest, pool "
+                             f"has {self.pool.n_usable}")
+            return
+        self.waiting.append(req)
+
+    def reject(self, req, reason: str) -> None:
+        req.error = f"rejected: {reason}"
+        req.done = True
+        self.n_rejections += 1
+
+    # -- admission -----------------------------------------------------------
+    def admit(self, prefill_fn) -> None:
+        """FCFS: prefill the head of the queue while blocks and batch
+        lanes are available.  ``prefill_fn(seq, tokens)`` runs the
+        engine's prefill and fills ``seq.length``/``seq.last_tok``."""
+        while self.waiting and len(self.running) < self.max_batch:
+            req = self.waiting[0]
+            seq = SequenceState(req=req)
+            tokens = seq.resume_tokens()
+            need = self.pool.blocks_for(len(tokens))
+            # block-aligned prompts open a fresh block on the first decode
+            # append: admitting without that headroom would get the
+            # request preempted (its prefill discarded) on the same step
+            headroom = 1 if len(tokens) % self.pool.block_size == 0 else 0
+            if need + headroom > self.pool.free_blocks:
+                break                      # FCFS: no skipping the head
+            self.waiting.popleft()
+            seq.blocks = self.pool.alloc(need)
+            seq.admitted_at = self._admit_counter
+            self._admit_counter += 1
+            prefill_fn(seq, tokens)
+            self.running.append(seq)
+
+    # -- decode-step capacity ------------------------------------------------
+    def _needs_block(self, seq: SequenceState) -> bool:
+        """True when this step's KV append starts a fresh block."""
+        return seq.length % self.pool.block_size == 0
+
+    def ensure_append_capacity(self) -> None:
+        """Allocate this step's new blocks, evicting the youngest running
+        request(s) while the pool is short.  Terminates: the oldest
+        request alone always fits (submit-time rejection bounds any
+        single request's lifetime need to the pool size)."""
+        while True:
+            needy = [s for s in self.running if self._needs_block(s)]
+            if len(needy) <= self.pool.free_blocks:
+                break
+            assert len(self.running) > 1, \
+                "pool cannot hold the oldest request (submit gate broken)"
+            self.preempt(max(self.running, key=lambda s: s.admitted_at))
+        if needy:      # one alloc = one pos-reset scatter per layer
+            ids = self.pool.alloc(len(needy))
+            for seq, bid in zip(needy, ids):
+                seq.blocks.append(bid)
+
+    def preempt(self, seq: SequenceState) -> None:
+        """Evict: free the blocks, re-queue at the front for re-prefill."""
+        self.pool.free(seq.blocks)
+        seq.blocks = []
+        self.running.remove(seq)
+        self.waiting.appendleft(seq.req)
+        self.n_preemptions += 1
+
+    # -- completion ----------------------------------------------------------
+    def finish(self, seq: SequenceState) -> None:
+        self.pool.free(seq.blocks)
+        seq.blocks = []
+        self.running.remove(seq)
+        seq.req.done = True
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def tokens_resident(self) -> int:
+        return sum(s.length for s in self.running)

@@ -1,0 +1,151 @@
+"""Three-impl parity for the paged dequantizing flash-decode kernel.
+
+The paged op reads packed bipolar K/V through a per-request block table
+(serving block pool).  Contract (same as every op in repro.kernels.ops):
+``reference`` (jnp gather + contiguous reference path) and ``interpret``
+(the scalar-prefetch Pallas kernel body in Python) agree to float
+tolerance on the same packed buffers; the ``pallas`` path runs the
+identical kernel body on TPU.  Additionally the paged reference must be
+*exactly* the contiguous :func:`ops.kv_cache_attention` on the gathered
+layout -- paging is memory management, not math.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bipolar
+from repro.kernels import ops
+
+RNG = np.random.default_rng(11)
+
+BITS = [2, 4, 8]
+
+
+def _paged_inputs(bits, *, B=2, H=3, G=2, d=16, bs=8, n_blocks=12, NB=4,
+                  lens=(19, 7)):
+    """Random per-request K/V quantized and scattered into pool blocks,
+    plus the equivalent contiguous (gathered) layout as an oracle."""
+    dw = bipolar.packed_words(d)
+    k_pool = np.zeros((n_blocks, bs, H, bits, dw), np.uint32)
+    v_pool = np.zeros_like(k_pool)
+    k_sc = np.zeros((n_blocks, bs, H, 1), np.float32)
+    v_sc = np.zeros_like(k_sc)
+    pool_pos = np.full((n_blocks, bs), -1, np.int32)
+    tables = np.zeros((B, NB), np.int32)    # pad entries -> null block 0
+    free = list(range(1, n_blocks))
+
+    T = NB * bs
+    k_cat = np.zeros((B, T, H, bits, dw), np.uint32)
+    v_cat = np.zeros_like(k_cat)
+    ksc_cat = np.ones((B, T, H, 1), np.float32)
+    vsc_cat = np.ones_like(ksc_cat)
+    pos_cat = np.full((B, T), -1, np.int32)
+
+    for b, ln in enumerate(lens):
+        k = jnp.asarray(RNG.standard_normal((1, ln, H, d)), jnp.float32)
+        v = jnp.asarray(RNG.standard_normal((1, ln, H, d)), jnp.float32)
+        kq, ks = ops.quantize_kv(k, bits)
+        vq, vs = ops.quantize_kv(v, bits)
+        nb = -(-ln // bs)
+        ids = [free.pop() for _ in range(nb)]
+        tables[b, :nb] = ids
+        for j, bid in enumerate(ids):
+            lo, hi = j * bs, min((j + 1) * bs, ln)
+            k_pool[bid, :hi - lo] = np.asarray(kq[0, lo:hi])
+            v_pool[bid, :hi - lo] = np.asarray(vq[0, lo:hi])
+            k_sc[bid, :hi - lo] = np.asarray(ks[0, lo:hi])
+            v_sc[bid, :hi - lo] = np.asarray(vs[0, lo:hi])
+            pool_pos[bid, :hi - lo] = np.arange(lo, hi)
+        k_cat[b, :ln] = np.asarray(kq[0])
+        v_cat[b, :ln] = np.asarray(vq[0])
+        ksc_cat[b, :ln] = np.asarray(ks[0])
+        vsc_cat[b, :ln] = np.asarray(vs[0])
+        pos_cat[b, :ln] = np.arange(ln)
+
+    q = jnp.asarray(RNG.standard_normal((B, H, G, d)), jnp.float32)
+    q_pos = jnp.asarray([[ln - G + i for i in range(G)] for ln in lens],
+                        jnp.int32)
+    paged = (q, jnp.asarray(k_pool), jnp.asarray(k_sc), jnp.asarray(v_pool),
+             jnp.asarray(v_sc), jnp.asarray(pool_pos), jnp.asarray(tables),
+             q_pos)
+    contiguous = (k_cat, ksc_cat, v_cat, vsc_cat, pos_cat)
+    return paged, contiguous
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("window", [None, 8])
+def test_paged_attention_reference_interpret_parity(bits, window):
+    paged, _ = _paged_inputs(bits)
+    d = paged[0].shape[-1]
+    y_ref = np.asarray(ops.paged_kv_cache_attention(
+        *paged, d=d, window=window, impl="reference"))
+    y_int = np.asarray(ops.paged_kv_cache_attention(
+        *paged, d=d, window=window, impl="interpret"))
+    np.testing.assert_allclose(y_int, y_ref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_paged_matches_contiguous_on_gathered_layout(bits):
+    """Paging must not change the math: the paged read equals the
+    contiguous quantized-KV attention over the same packed planes laid
+    out contiguously (exactly, under the shared reference dataflow)."""
+    paged, (k_cat, ksc_cat, v_cat, vsc_cat, pos_cat) = _paged_inputs(bits)
+    q = paged[0]
+    B, H, G, d = q.shape
+    T = k_cat.shape[1]
+    y_p = np.asarray(ops.paged_kv_cache_attention(
+        *paged, d=d, impl="reference"))
+
+    fold = lambda a: a.transpose((0, 2, 1) + tuple(
+        range(3, a.ndim))).reshape((B * H, T) + a.shape[3:])
+    y_c = np.asarray(ops.kv_cache_attention(
+        q.reshape(B * H, G, d),
+        fold(jnp.asarray(k_cat)), fold(jnp.asarray(ksc_cat)),
+        fold(jnp.asarray(v_cat)), fold(jnp.asarray(vsc_cat)),
+        jnp.repeat(paged[-1], H, 0),
+        jnp.repeat(jnp.asarray(pos_cat), H, 0),
+        d=d, impl="reference")).reshape(B, H, G, d)
+    np.testing.assert_array_equal(y_p, y_c)
+
+
+def test_paged_null_block_and_inactive_lanes_return_zero():
+    """Padded table entries point at the null block (pos -1) and padded
+    batch lanes carry q_pos -1: both must contribute exactly 0 under
+    reference AND interpret."""
+    paged, _ = _paged_inputs(8)
+    q, kp, ks, vp, vs, pos, tables, q_pos = paged
+    d = q.shape[-1]
+    # lane 1 fully inactive: null table + masked q rows
+    tables = tables.at[1].set(0)
+    q_pos = q_pos.at[1].set(-1)
+    for impl in ("reference", "interpret"):
+        y = np.asarray(ops.paged_kv_cache_attention(
+            q, kp, ks, vp, vs, pos, tables, q_pos, d=d, impl=impl))
+        np.testing.assert_array_equal(y[1], np.zeros_like(y[1]),
+                                      err_msg=impl)
+        assert np.abs(y[0]).max() > 0      # active lane still attends
+
+
+def test_paged_block_order_is_table_order():
+    """Swapping physical block ids (with the table updated to match)
+    must not change the result: position comes from pool_pos, not from
+    where a block happens to live in the pool."""
+    paged, _ = _paged_inputs(8, lens=(19,), B=1)
+    q, kp, ks, vp, vs, pos, tables, q_pos = paged
+    d = q.shape[-1]
+    y0 = np.asarray(ops.paged_kv_cache_attention(
+        q, kp, ks, vp, vs, pos, tables, q_pos, d=d, impl="reference"))
+
+    # swap physical blocks a<->b everywhere and patch the table
+    a, b = int(tables[0, 0]), int(tables[0, 2])
+    perm = np.arange(kp.shape[0])
+    perm[[a, b]] = [b, a]
+    swap = lambda arr: jnp.asarray(np.asarray(arr)[perm])
+    tbl = np.asarray(tables).copy()
+    mask_a, mask_b = tbl == a, tbl == b
+    tbl[mask_a], tbl[mask_b] = b, a
+    y1 = np.asarray(ops.paged_kv_cache_attention(
+        q, swap(kp), swap(ks), swap(vp), swap(vs), swap(pos),
+        jnp.asarray(tbl), q_pos, d=d, impl="reference"))
+    np.testing.assert_array_equal(y0, y1)

@@ -209,6 +209,133 @@ def test_quantized_kv_engine_token_identical_and_2x_smaller(tmp_path):
     assert bf_bytes / E.kv_cache_bytes(eng_q8.caches) >= 1.7
 
 
+def test_bucketed_prefill_matches_unbucketed():
+    """Engine prefill buckets prompt lengths to the next power of two
+    (pad positions -1, logits gathered at the last real token): the
+    logits must match the exact-length prefill and the bucket count must
+    stay O(log max_len) over a stream of varied lengths."""
+    cfg, params = _setup("llama3-8b", n_layers=2)
+    eng = E.Engine(params, cfg, n_slots=1, max_len=64)
+    rng = np.random.default_rng(2)
+    for s in (3, 7, 11, 30):
+        prompt = rng.integers(0, cfg.vocab, (s,), dtype=np.int32)
+        logits_b, _ = eng._bucketed_prefill(prompt)
+        caches = M.init_caches(cfg, 1, max_len=64)
+        logits_u, _ = E.prefill_step(
+            params, {"tokens": jnp.asarray(prompt)[None]}, caches, cfg)
+        got = np.asarray(logits_b, np.float32)
+        ref = np.asarray(logits_u, np.float32)
+        np.testing.assert_allclose(got, ref, rtol=2e-2, atol=2e-2)
+        assert (np.argmax(got, -1) == np.argmax(ref, -1)).all(), s
+    # lengths 1..max_len compile at most O(log max_len) prefill programs
+    buckets = {E.prefill_bucket(s, 64) for s in range(1, 65)}
+    assert buckets == {8, 16, 32, 64}
+
+
+def _direct_greedy(params, cfg, prompt, n_new, max_len=32):
+    """Oracle: exact-length prefill + greedy decode, no engine."""
+    caches = M.init_caches(cfg, 1, max_len=max_len)
+    logits, caches = E.prefill_step(
+        params, {"tokens": jnp.asarray(prompt)[None]}, caches, cfg)
+    out = [int(np.argmax(np.asarray(logits[0])))]
+    for i in range(n_new - 1):
+        logits, caches = E.serve_step(
+            params, {"tokens": jnp.asarray([[out[-1]]], jnp.int32),
+                     "positions": jnp.asarray([[len(prompt) + i]],
+                                              jnp.int32)},
+            caches, cfg)
+        out.append(int(np.argmax(np.asarray(logits[0]))))
+    return out
+
+
+def test_bucketed_prefill_ring_index_rewinds_to_real_length():
+    """A prompt whose bucket reaches max_len must NOT wrap the ring and
+    overwrite live prompt KV: the write index is rewound to the real
+    length so decode consumes the pad slots first."""
+    cfg, params = _setup("llama3-8b", n_layers=2)
+    prompt = np.arange(17, dtype=np.int32) % cfg.vocab   # buckets to 32
+    eng = E.Engine(params, cfg, n_slots=1, max_len=32)
+    req = E.Request(prompt=prompt.copy(), max_new_tokens=6)
+    eng.submit(req)
+    eng.run()
+    assert req.out == _direct_greedy(params, cfg, prompt, 6), req.out
+
+
+def test_ssm_engine_prefill_stays_exact():
+    """SSM recurrences consume pad tokens regardless of position
+    masking, so the engine must prefill SSM archs at exact length --
+    and still match the no-engine oracle."""
+    cfg, params = _setup("mamba2-130m")
+    prompt = np.arange(7, dtype=np.int32) % cfg.vocab
+    eng = E.Engine(params, cfg, n_slots=1, max_len=32)
+    req = E.Request(prompt=prompt.copy(), max_new_tokens=5)
+    eng.submit(req)
+    eng.run()
+    assert req.out == _direct_greedy(params, cfg, prompt, 5), req.out
+
+
+def test_contiguous_engine_serves_prompt_longer_than_ring():
+    """Prompts past the ring take the exact-length SWA-tail prefill (no
+    bucketing assert): the request completes and other requests are not
+    stranded."""
+    cfg, params = _setup("llama3-8b", n_layers=2)
+    eng = E.Engine(params, cfg, n_slots=2, max_len=32)
+    rng = np.random.default_rng(4)
+    long_req = E.Request(prompt=rng.integers(0, cfg.vocab, (40,),
+                                             dtype=np.int32),
+                         max_new_tokens=4)
+    short = E.Request(prompt=rng.integers(0, cfg.vocab, (6,),
+                                          dtype=np.int32),
+                      max_new_tokens=4)
+    eng.submit(long_req)
+    eng.submit(short)
+    eng.run()
+    assert long_req.done and short.done
+    assert len(short.out) == 4
+
+
+def test_cross_attention_cache_kv_bits_close():
+    """ROADMAP open item: kv_bits on the enc-dec cross-K/V cache.  The
+    quantized cross cache must decode close to the bf16 cross cache
+    (reference impl; the cross stream re-reads every decode step).
+    d_head=32 divides the pack word exactly, so the payload ratio is the
+    pure bits-per-element ratio."""
+    cfg, params = _setup("seamless-m4t-medium", d_head=32)
+    rng = np.random.default_rng(0)
+    b, s = 2, 12
+    toks = jnp.array(rng.integers(0, cfg.vocab, (b, s), dtype=np.int32))
+    frames = jnp.array(
+        rng.standard_normal((b, 16, cfg.frontend_dim)).astype(np.float32)
+        * 0.1)
+
+    def run(c):
+        caches = M.init_caches(c, b, max_len=32, enc_len=16)
+        _, caches = E.prefill_step(
+            params, {"tokens": toks[:, :s - 1], "frames": frames},
+            caches, c)
+        # the quantized cross cache holds packed planes + scales
+        xc = caches["cross"][0]
+        if c.kv_bits:
+            assert xc["k"].dtype == jnp.uint32 and "k_scale" in xc
+        logits, _ = E.serve_step(
+            params, {"tokens": toks[:, s - 1:],
+                     "positions": jnp.full((b, 1), s - 1, jnp.int32)},
+            caches, c)
+        return np.asarray(logits, dtype=np.float32)
+
+    bf = run(cfg)
+    q8 = run(dataclasses.replace(cfg, kv_bits=8))
+    assert (np.argmax(bf, -1) == np.argmax(q8, -1)).all()
+    np.testing.assert_allclose(q8, bf, rtol=0.1, atol=0.1)
+    # payload shrinks ~2x: packed 8-bit planes vs bf16
+    bf_caches = M.init_caches(cfg, b, max_len=32, enc_len=16)
+    q8_caches = M.init_caches(dataclasses.replace(cfg, kv_bits=8), b,
+                              max_len=32, enc_len=16)
+    ratio = (E.kv_cache_bytes(bf_caches, payload_only=True)
+             / E.kv_cache_bytes(q8_caches, payload_only=True))
+    assert ratio >= 2.0, ratio
+
+
 def test_int8_kv_cache_decode_close():
     """kv_bits=8 decode must track the bf16-cache decode closely (the
     bit-level KV stream; now stored as packed bipolar planes)."""

@@ -9,7 +9,10 @@ compares tokens/s and greedy outputs.
 ``--paged`` switches the quantized run to the paged block-pool engine
 (kv_bits=8 packed KV planes shared through block tables, scheduler with
 FCFS admission + preemption -- see src/repro/serving/paged_cache.py) and
-prints the pool occupancy report.
+prints the pool occupancy report.  The demo prompts share a system-style
+prefix, so the paged run also exercises the refcounted copy-on-write
+prefix cache: later requests acquire the resident prefix blocks and
+prefill only their suffix (watch the hit/COW counters in the report).
 
 Run:  PYTHONPATH=src python examples/serve_llm.py [--new-tokens 12]
                                                   [--paged]
@@ -60,8 +63,12 @@ def main():
           f"{cfg.param_count() / 1e6:.1f}M params")
 
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, cfg.vocab, (6 + i,), dtype=np.int32)
-               for i in range(8)]
+    # a shared "system prompt" head + unique tails: the paged engine's
+    # prefix cache serves the head from residency for requests 2..8
+    system = rng.integers(0, cfg.vocab, (24,), dtype=np.int32)
+    prompts = [np.concatenate([
+        system, rng.integers(0, cfg.vocab, (6 + i,), dtype=np.int32)
+    ]).astype(np.int32) for i in range(8)]
 
     print("— serving bf16 …")
     reqs_bf, tps_bf, _ = serve(params, cfg, prompts, None, args.new_tokens)
@@ -91,6 +98,11 @@ def main():
               f"{rep['pool_bytes'] / 1024:.0f} KiB, "
               f"{rep['preemptions']} preemptions, "
               f"{rep['rejections']} rejections")
+        print(f"prefix cache: {rep['prefix_hits']} hits / "
+              f"{rep['prefix_lookups']} lookups, "
+              f"{rep['prefix_hit_tokens']} prompt tokens served from "
+              f"residency, {rep['cow_copies']} copy-on-writes, "
+              f"{rep['evictions']} evictions")
     assert all(r.done for r in reqs_bf + reqs_q)
     print("done.")
 

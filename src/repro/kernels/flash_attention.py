@@ -260,30 +260,33 @@ def flash_attention_quantized(q: jax.Array,
 # Paged variant: KV read through a block table (serving block pool)
 # ---------------------------------------------------------------------------
 
+DEFAULT_PAGED_BQ = 256   # query rows per tile (suffix prefill can be long)
+
+
 def _kernel_paged(bt_ref, qp_ref, kp_ref, ks_ref, vs_ref, q_ref, kq_ref,
                   vq_ref, out_ref, m_ref, l_ref, acc_ref, *,
                   scale: float, causal: bool, window,
-                  gq: int, bs: int, dp: int, n_bits: int):
+                  bq: int, bs: int, dp: int, n_bits: int):
     del bt_ref  # consumed by the index maps (scalar prefetch)
-    jk = pl.program_id(2)
-    nk = pl.num_programs(2)
+    jk = pl.program_id(3)
+    nk = pl.num_programs(3)
 
     @pl.when(jk == 0)
     def _init():
-        m_ref[...] = jnp.full((gq, 1), -1e30, jnp.float32)
-        l_ref[...] = jnp.zeros((gq, 1), jnp.float32)
-        acc_ref[...] = jnp.zeros((gq, dp), jnp.float32)
+        m_ref[...] = jnp.full((bq, 1), -1e30, jnp.float32)
+        l_ref[...] = jnp.zeros((bq, 1), jnp.float32)
+        acc_ref[...] = jnp.zeros((bq, dp), jnp.float32)
 
     # one physical block of the pool, routed here by the block table:
     # kq_ref block is (1, bs, 1, n_bits, dw) -> (bs, n_bits, dw)
     k = _dequant_tile(kq_ref[0][:, 0], ks_ref[0], n_bits, bs, dp)
     v = _dequant_tile(vq_ref[0][:, 0], vs_ref[0], n_bits, bs, dp)
 
-    q = q_ref[0, 0]                               # (gq, dp), zero pad cols
+    q = q_ref[0, 0]                               # (bq, dp), zero pad cols
     s = jax.lax.dot_general(q.astype(jnp.float32), k,
                             (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-    qpos = qp_ref[0][:, None]                     # (gq, 1)
+    qpos = qp_ref[0][:, None]                     # (bq, 1)
     kpos = kp_ref[0][None, :]                     # (1, bs)
     valid = _position_mask(qpos, kpos, causal, window)
     s = jnp.where(valid, s, -1e30)
@@ -297,7 +300,7 @@ def _kernel_paged(bt_ref, qp_ref, kp_ref, ks_ref, vs_ref, q_ref, kq_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("d", "n_bits", "causal", "window", "interpret"))
+    static_argnames=("d", "n_bits", "causal", "window", "block", "interpret"))
 def flash_attention_paged_quantized(q: jax.Array,
                                     k_pool: jax.Array, k_scale: jax.Array,
                                     v_pool: jax.Array, v_scale: jax.Array,
@@ -306,65 +309,78 @@ def flash_attention_paged_quantized(q: jax.Array,
                                     q_pos: jax.Array, *,
                                     d: int, n_bits: int,
                                     causal: bool = True, window=None,
+                                    block: int = DEFAULT_PAGED_BQ,
                                     interpret: bool = False) -> jax.Array:
     """Dequant-on-read attention over a *paged* bipolar-INT KV pool.
 
     The pool stores fixed-size token blocks shared by all requests; each
     request addresses its blocks through a block table.  The table is a
-    scalar-prefetch operand: the Mosaic grid walks ``(B, H, n_blocks)``
-    and the K/V block specs index the pool with ``table[b, j]``, so HBM
-    only ever moves the blocks a request actually owns -- the gather
-    never materializes a contiguous copy.
+    scalar-prefetch operand: the Mosaic grid walks ``(B, H, Gq/bq,
+    n_blocks)`` and the K/V block specs index the pool with
+    ``table[b, j]``, so HBM only ever moves the blocks a request
+    actually owns -- the gather never materializes a contiguous copy.
+
+    Decode calls carry one query row per GQA group; block-table *suffix
+    prefill* folds the suffix length into the query axis (``Gq = G *
+    Sq``), tiled ``bq`` rows at a time with causal masking by absolute
+    position -- the suffix attends through the shared prefix blocks and
+    its own freshly written blocks in a single pass.
 
     Args:
-      q: ``(B, H, G, Dp)`` -- per-kv-head grouped queries, zero-padded
-        past the true head dim ``d`` (``Dp = 32*ceil(d/32)``).
+      q: ``(B, H, Gq, Dp)`` -- per-kv-head grouped queries (``Gq`` =
+        group size x query tokens), zero-padded past the true head dim
+        ``d`` (``Dp = 32*ceil(d/32)``); ``Gq`` must tile by ``block``.
       k_pool/v_pool: ``(n_blocks, bs, H, n_bits, Dp/32)`` uint32 planes.
       k_scale/v_scale: ``(n_blocks, bs, H)`` f32 absmax scales.
       pool_pos: ``(n_blocks, bs)`` int32 absolute positions, -1 = empty
         slot (freshly allocated or null block 0).
       block_tables: ``(B, NB)`` int32 physical block ids; rows pad with
         0, the reserved null block whose positions stay -1.
-      q_pos: ``(B, G)`` int32 query positions (-1 rows are masked out).
+      q_pos: ``(B, Gq)`` int32 query positions (-1 rows are masked out).
 
-    Returns ``(B, H, G, Dp)``; the caller slices ``[..., :d]``.
+    Returns ``(B, H, Gq, Dp)``; the caller slices ``[..., :d]``.
     """
     b, h, gq, dp = q.shape
     n_blocks, bs, hp, nb_bits, dw = k_pool.shape
     nb = block_tables.shape[1]
     assert (hp, nb_bits, dw * bipolar.PACK_WIDTH) == (h, n_bits, dp), (
         k_pool.shape, q.shape)
+    bq = min(block, gq)
+    if gq % bq:
+        raise ValueError(f"query rows {gq} not tiled by {bq}")
     kernel = functools.partial(
         _kernel_paged, scale=1.0 / np.sqrt(d), causal=causal, window=window,
-        gq=gq, bs=bs, dp=dp, n_bits=n_bits)
+        bq=bq, bs=bs, dp=dp, n_bits=n_bits)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(b, h, nb),
+        grid=(b, h, gq // bq, nb),
         in_specs=[
-            pl.BlockSpec((1, gq), lambda i, j, k, bt: (i, 0)),     # q_pos
-            pl.BlockSpec((1, bs), lambda i, j, k, bt: (bt[i, k], 0)),  # pos
+            pl.BlockSpec((1, bq), lambda i, j, q, k, bt: (i, q)),   # q_pos
+            pl.BlockSpec((1, bs), lambda i, j, q, k, bt: (bt[i, k], 0)),
             pl.BlockSpec((1, bs, 1),
-                         lambda i, j, k, bt: (bt[i, k], 0, j)),    # k_scale
+                         lambda i, j, q, k, bt: (bt[i, k], 0, j)),  # k_scale
             pl.BlockSpec((1, bs, 1),
-                         lambda i, j, k, bt: (bt[i, k], 0, j)),    # v_scale
-            pl.BlockSpec((1, 1, gq, dp), lambda i, j, k, bt: (i, j, 0, 0)),
+                         lambda i, j, q, k, bt: (bt[i, k], 0, j)),  # v_scale
+            pl.BlockSpec((1, 1, bq, dp),
+                         lambda i, j, q, k, bt: (i, j, q, 0)),      # q
             pl.BlockSpec((1, bs, 1, n_bits, dw),
-                         lambda i, j, k, bt: (bt[i, k], 0, j, 0, 0)),
+                         lambda i, j, q, k, bt: (bt[i, k], 0, j, 0, 0)),
             pl.BlockSpec((1, bs, 1, n_bits, dw),
-                         lambda i, j, k, bt: (bt[i, k], 0, j, 0, 0)),
+                         lambda i, j, q, k, bt: (bt[i, k], 0, j, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, gq, dp),
-                               lambda i, j, k, bt: (i, j, 0, 0)),
-        scratch_shapes=[pltpu.VMEM((gq, 1), jnp.float32),
-                        pltpu.VMEM((gq, 1), jnp.float32),
-                        pltpu.VMEM((gq, dp), jnp.float32)],
+        out_specs=pl.BlockSpec((1, 1, bq, dp),
+                               lambda i, j, q, k, bt: (i, j, q, 0)),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, dp), jnp.float32)],
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, gq, dp), q.dtype),
         compiler_params=compat.compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
         interpret=interpret,
     )(block_tables, q_pos, pool_pos, k_scale, v_scale, q, k_pool, v_pool)
 

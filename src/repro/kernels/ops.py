@@ -280,11 +280,15 @@ def paged_kv_cache_attention(q: jax.Array,
                              pool_pos: jax.Array, block_tables: jax.Array,
                              q_pos: jax.Array, *,
                              d: int, causal: bool = True, window=None,
+                             q_block: int | None = None,
                              impl: str | None = None) -> jax.Array:
     """Attention over a *paged* packed bipolar KV pool via a block table.
 
-    ``q (B, H, G, D)`` per-kv-head grouped queries; the pool holds
-    fixed-size token blocks shared by every request:
+    ``q (B, H, Gq, D)`` per-kv-head grouped queries -- ``Gq`` is the
+    GQA group size for decode, or ``G * Sq`` with the suffix length
+    folded in for block-table suffix prefill (causality is by absolute
+    ``q_pos``, so multi-token causal queries need no extra plumbing).
+    The pool holds fixed-size token blocks shared by every request:
     ``k_pool/v_pool (n_blocks, bs, H, n_bits, Dw)`` uint32 planes,
     ``k_scale/v_scale (n_blocks, bs, H, 1)`` f32, ``pool_pos
     (n_blocks, bs)`` int32 (-1 = empty slot).  ``block_tables (B, NB)``
@@ -293,19 +297,17 @@ def paged_kv_cache_attention(q: jax.Array,
 
     Dispatch: pallas | interpret run the block-table-gathering flash
     kernel (the table is a scalar-prefetch operand indexing the pool
-    block specs); reference gathers the request's blocks with jnp
-    indexing and reuses the contiguous :func:`kv_cache_attention`
-    reference path on the exact same packed planes.
+    block specs, the query axis tiled by ``q_block`` rows); reference
+    gathers the request's blocks with :func:`repro.kernels.ref.gather_paged_kv`
+    and reuses the contiguous :func:`kv_cache_attention` reference path
+    on the exact same packed planes.
     """
     impl = impl or default_impl()
     b, h, g, _ = q.shape
     n_blocks, bs = pool_pos.shape
-    nb = block_tables.shape[1]
     n_bits = k_pool.shape[-2]
     if impl == "reference":
-        flat = block_tables.reshape(-1)
-        t = nb * bs
-        gath = lambda a: a[flat].reshape((b, t) + a.shape[2:])
+        gath = partial(ref.gather_paged_kv, block_tables=block_tables)
         kv_pos = gath(pool_pos[:, :, None])[..., 0]
         o = kv_cache_attention(
             q.reshape(b * h, g, q.shape[-1]),
@@ -316,11 +318,13 @@ def paged_kv_cache_attention(q: jax.Array,
         return o.reshape(b, h, g, d)
     dp = k_pool.shape[-1] * bipolar.PACK_WIDTH
     gp = _round_up(g, 8)
+    bq = min(q_block or flash_kernel.DEFAULT_PAGED_BQ, gp)
+    gp = _round_up(gp, bq)
     qp_arr = _pad_dim(_pad_dim(q, 3, dp), 2, gp)
     q_pos_p = _pad_dim(q_pos, 1, gp, -1)          # pad rows fully masked
     out = flash_kernel.flash_attention_paged_quantized(
         qp_arr, k_pool, k_scale[..., 0], v_pool, v_scale[..., 0],
         pool_pos, block_tables, q_pos_p,
-        d=d, n_bits=n_bits, causal=causal, window=window,
+        d=d, n_bits=n_bits, causal=causal, window=window, block=bq,
         interpret=(impl == "interpret"))
     return out[:, :, :g, :d]

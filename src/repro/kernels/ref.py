@@ -143,6 +143,24 @@ def apmm_packed_ref(a: BipolarTensor, b: BipolarTensor,
     return y + n_pad * bipolar.max_value(a.n_bits) * bipolar.max_value(b.n_bits)
 
 
+def gather_paged_kv(pool_leaf: jax.Array,
+                    block_tables: jax.Array) -> jax.Array:
+    """Materialize a per-request contiguous view of a paged pool leaf.
+
+    ``pool_leaf (n_blocks, bs, ...)`` + ``block_tables (B, NB)`` ->
+    ``(B, NB*bs, ...)``: request ``b``'s logical token ``t`` is block
+    ``t // bs``, slot ``t % bs`` of its table row.  Pure indexing -- the
+    ``reference`` impl of :func:`repro.kernels.ops.paged_kv_cache_attention`
+    runs the contiguous attention oracle on this view, which is what
+    makes "paging changes memory management, not math" a checkable
+    statement (the gathered planes are byte-identical to the pool's).
+    """
+    b, nb = block_tables.shape
+    bs = pool_leaf.shape[1]
+    g = pool_leaf[block_tables.reshape(-1)]
+    return g.reshape((b, nb * bs) + pool_leaf.shape[2:])
+
+
 def apmm_dequant_ref(a: BipolarTensor, b: BipolarTensor,
                      fused: bool = True,
                      out_dtype=jnp.float32) -> jax.Array:

@@ -280,26 +280,37 @@ def attention_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
     new_cache = None
     quant_kv = None           # (k_packed, k_scale, v_packed, v_scale) folded
     if cache is not None and "block_tables" in cache:
-        # paged decode: the cache is a block pool shared by every request
-        # (k/v (n_blocks, bs, H, kv_bits, Dw) planes + scales), addressed
-        # through this batch's block table.  Append the new token at
-        # (table[length // bs], length % bs), then attend through the
-        # table (ops.paged_kv_cache_attention).  Decode-only: prefill
-        # fills pool blocks by copying a contiguous B=1 cache
-        # (serving.paged_cache.PagedKVPool.write_prefill).
-        assert s == 1, "paged cache is a decode path (one token per step)"
+        # paged decode / suffix prefill: the cache is a block pool shared
+        # by every request (k/v (n_blocks, bs, H, kv_bits, Dw) planes +
+        # scales), addressed through this batch's block table.  The
+        # ``s`` new tokens of row b land at slots ``length[b] + i`` --
+        # physically (table[slot // bs], slot % bs) -- then attention
+        # runs through the table (ops.paged_kv_cache_attention) with the
+        # suffix folded into the query axis; causality is by absolute
+        # position, so the suffix sees the shared prefix blocks AND its
+        # own just-written tokens in one pass.  Pad tokens (pos -1, from
+        # pow2 length bucketing or inactive lanes) are *dropped* at the
+        # scatter (routed out of bounds), so they can never touch the
+        # null block or a live block's slots.
         kv_bits = cache["k"].shape[-2]
+        n_blocks = cache["k"].shape[0]
         blk = cache["k"].shape[1]
         bt, ln = cache["block_tables"], cache["length"]
         k_q, k_s = ops.quantize_kv(k, kv_bits)
         v_q, v_s = ops.quantize_kv(v, kv_bits)
-        phys = jnp.take_along_axis(bt, (ln // blk)[:, None], 1)[:, 0]
-        off = ln % blk
-        ck = cache["k"].at[phys, off].set(k_q[:, 0])
-        cks = cache["k_scale"].at[phys, off].set(k_s[:, 0])
-        cv = cache["v"].at[phys, off].set(v_q[:, 0])
-        cvs = cache["v_scale"].at[phys, off].set(v_s[:, 0])
-        cpos = cache["pos"].at[phys, off].set(pos2d[:, 0].astype(jnp.int32))
+        slot = ln[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]  # (B,s)
+        valid = pos2d >= 0
+        logical = jnp.where(valid, slot // blk, 0)
+        phys = jnp.take_along_axis(bt, logical, 1)
+        phys = jnp.where(valid, phys, n_blocks)     # out of bounds -> drop
+        off = slot % blk
+
+        def wr(buf, new):
+            return buf.at[phys, off].set(new.astype(buf.dtype), mode="drop")
+
+        ck, cks = wr(cache["k"], k_q), wr(cache["k_scale"], k_s)
+        cv, cvs = wr(cache["v"], v_q), wr(cache["v_scale"], v_s)
+        cpos = wr(cache["pos"], pos2d.astype(jnp.int32))
         new_cache = dict(cache, k=ck, v=cv, k_scale=cks, v_scale=cvs,
                          pos=cpos)
         qg = q.reshape(b, s, hk, g, dh).transpose(0, 2, 3, 1, 4).reshape(

@@ -7,18 +7,23 @@ them with continuous batching in one of two memory regimes:
 * **contiguous** (``paged=False``): a fixed decode batch of ``n_slots``
   lanes, each lane owning one request's ``(max_len,)`` KV slab; finished
   lanes are refilled from the queue without stopping the others.
-* **paged** (``paged=True``): requests share a block pool of packed
-  bipolar-INT KV planes (:mod:`repro.serving.paged_cache`) addressed
-  through per-request block tables, scheduled by
-  :mod:`repro.serving.scheduler` -- FCFS admission gated on free blocks,
-  decode batches bucketed to powers of two, preemption-by-eviction when
-  the pool runs dry.  Capacity scales with tokens actually resident x
-  ``kv_bits``/16, not ``n_slots x max_len``.
+* **paged** (``paged=True``): requests share a refcounted copy-on-write
+  block pool of packed bipolar-INT KV planes
+  (:mod:`repro.serving.paged_cache`) addressed through per-request block
+  tables, scheduled by :mod:`repro.serving.scheduler` -- FCFS admission
+  gated on free blocks, decode batches bucketed to powers of two,
+  preemption-by-eviction when the pool runs dry.  Capacity scales with
+  tokens actually resident x ``kv_bits``/16, not ``n_slots x max_len``,
+  and the pool's *prefix cache* shares blocks between requests with a
+  common prompt prefix: admission acquires the cached blocks and
+  prefills only the **suffix**, directly through the block table
+  (``_paged_prefill``).
 
-Prefill always runs per-request at B=1, with the prompt *bucketed to the
-next power of two* (padded tokens carry position -1 and are masked out of
-every attention read), so a stream of varied prompt lengths compiles
-O(log max_len) programs instead of one per distinct length.
+Prefill always runs per-request at B=1, with the prompt (paged: the
+uncached suffix) *bucketed to the next power of two* (padded tokens
+carry position -1 and are masked out of every attention read and every
+pool write), so a stream of varied lengths compiles O(log max_len)
+programs instead of one per distinct length.
 
 Serving uses quantized packed weights (the paper's technique); pass
 ``quant=cfg.quant`` after :func:`repro.models.model.quantize_params`.
@@ -150,6 +155,13 @@ class Request:
     prompt: np.ndarray              # (s,) int32
     max_new_tokens: int = 16
     temperature: float = 0.0        # 0 = greedy
+    seed: Optional[int] = None      # per-request sampling stream; token k
+                                    # is drawn from rng((seed, k)), so
+                                    # preemption/recompute cannot change
+                                    # the sampled sequence.  None: the
+                                    # engine assigns a distinct seed at
+                                    # submit (identical prompts still
+                                    # sample diverse completions)
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
     error: Optional[str] = None     # set on clean rejection (paged)
@@ -187,28 +199,34 @@ class Engine:
     blocks x ``block_size`` tokens, run under the
     :class:`~repro.serving.scheduler.Scheduler`, and the decode batch is
     whatever is running, padded to the next power-of-two bucket
-    (<= ``max_batch``) to bound recompiles.  Greedy decode is
-    token-identical to the contiguous engine at equal ``kv_bits``.
+    (<= ``max_batch``) to bound recompiles.  With ``prefix_cache``
+    (default) admission reuses pool blocks whose prompt-chain hash
+    matches the head of the request and prefills only the suffix; block
+    aliasing is refcounted with copy-on-write, so sharing changes
+    memory management, not math: greedy decode stays token-identical to
+    the contiguous engine (and to ``prefix_cache=False``) at equal
+    ``kv_bits``.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
                  max_len: int = 256, quant: Optional[QuantConfig] = None,
                  paged: bool = False, block_size: int = 16,
                  n_blocks: Optional[int] = None,
-                 max_batch: Optional[int] = None):
+                 max_batch: Optional[int] = None,
+                 prefix_cache: bool = True):
         self.params, self.cfg, self.quant = params, cfg, quant
         self.n_slots, self.max_len = n_slots, max_len
         self.paged = paged
         self.steps = 0
-        self._rng = np.random.default_rng(0)
+        self._seed_counter = 0      # default per-request sampling seeds
         if paged:
             from repro.serving.paged_cache import PagedKVPool
             from repro.serving.scheduler import Scheduler
             assert max_len % block_size == 0, (max_len, block_size)
             # SWA rings shorter than max_len wrap during prefill, breaking
-            # write_prefill's slot-i-holds-token-i copy; until the pool
-            # learns to drop out-of-window blocks, paged serving requires
-            # the full window to fit (ROADMAP open item)
+            # the slot-i-holds-token-i block layout; until the pool learns
+            # to drop out-of-window blocks, paged serving requires the
+            # full window to fit (ROADMAP open item)
             assert cfg.window is None or cfg.window >= max_len, \
                 f"paged serving needs window ({cfg.window}) >= " \
                 f"max_len ({max_len})"
@@ -217,7 +235,12 @@ class Engine:
                 # plus the reserved null block
                 n_blocks = n_slots * (max_len // block_size) + 1
             self.max_batch = max_batch or 2 * n_slots
-            self.pool = PagedKVPool(cfg, n_blocks, block_size, quant=quant)
+            # the engine's VLM frontend is a stub (zero patch embeds), but
+            # real per-request patch embeds would make equal token
+            # prefixes carry different KV -- keep the cache off for vlm
+            self.pool = PagedKVPool(
+                cfg, n_blocks, block_size, quant=quant,
+                prefix_cache=prefix_cache and cfg.family != "vlm")
             self.scheduler = Scheduler(self.pool, max_len=max_len,
                                        max_batch=self.max_batch)
             self.n_batch_blocks = max_len // block_size   # table width
@@ -228,6 +251,9 @@ class Engine:
 
     # -- request lifecycle -------------------------------------------------
     def submit(self, req: Request):
+        if getattr(req, "seed", None) is None:
+            req.seed = self._seed_counter     # stable across preemption
+            self._seed_counter += 1
         if self.paged:
             self.scheduler.submit(req)
         else:
@@ -305,13 +331,25 @@ class Engine:
                 out[key] = [fix(c) for c in out[key]]
         return out
 
-    def _sample_token(self, row_logits: np.ndarray, temperature: float) -> int:
-        if temperature <= 0.0:
+    @staticmethod
+    def _sample_token(row_logits: np.ndarray, seq) -> int:
+        """Sample the next token for ``seq`` (a SequenceState).
+
+        Greedy below temperature 0+; otherwise inverse-CDF over the
+        softmax using the request's stateless per-token RNG stream
+        (``seq.sample_rng(k)`` for output index k) -- the draw depends
+        only on (request seed, output index), never on batch composition
+        or preemption history."""
+        t = seq.temperature
+        if t <= 0.0:
             return int(np.argmax(row_logits))
-        z = row_logits.astype(np.float64) / temperature
+        z = row_logits.astype(np.float64) / t
         z -= z.max()
-        probs = np.exp(z) / np.exp(z).sum()
-        return int(self._rng.choice(len(probs), p=probs))
+        probs = np.exp(z)
+        probs /= probs.sum()
+        u = seq.sample_rng(len(seq.req.out)).random()
+        return int(min(np.searchsorted(np.cumsum(probs), u),
+                       len(probs) - 1))
 
     # -- contiguous path ----------------------------------------------------
     def _prefill_into(self, req: Request, slot: int):
@@ -320,7 +358,7 @@ class Engine:
         self.caches = _tree_write_slot(self.caches, one, slot)
         seq = SequenceState(req=req, length=len(req.prompt))
         seq.last_tok = self._sample_token(
-            np.asarray(logits[0], np.float32), req.temperature)
+            np.asarray(logits[0], np.float32), seq)
         req.out.append(seq.last_tok)
         self.slot_req[slot] = seq
 
@@ -345,7 +383,7 @@ class Engine:
         self.steps += 1
         for slot in active:
             seq = self.slot_req[slot]
-            seq.last_tok = self._sample_token(logits[slot], seq.temperature)
+            seq.last_tok = self._sample_token(logits[slot], seq)
             seq.req.out.append(seq.last_tok)
             seq.length += 1
             if len(seq.req.out) >= seq.req.max_new_tokens \
@@ -356,19 +394,57 @@ class Engine:
 
     # -- paged path ----------------------------------------------------------
     def _paged_prefill(self, seq, tokens: np.ndarray):
-        """Scheduler admission callback: prefill ``tokens`` contiguously
-        at B=1, copy the packed planes into the request's pool blocks."""
-        s = len(tokens)
-        logits, one = self._bucketed_prefill(tokens)
-        self.pool.write_prefill(one, seq.blocks, s)
-        seq.length = s
+        """Scheduler admission callback: block-table *suffix* prefill.
+
+        The first ``seq.cached_len`` tokens of the chain are already
+        resident in the pool (prefix-cache hit: blocks acquired, maybe
+        copy-on-written by the scheduler); only the suffix runs through
+        the model, at B=1 with its length bucketed to the next power of
+        two (pad tokens carry position -1: their pool writes are dropped
+        and their attention rows masked, so a varied suffix stream
+        compiles O(log max_len) programs).  The suffix K/V lands
+        directly in the request's blocks via the paged scatter write,
+        and its queries attend through the shared prefix blocks and the
+        fresh suffix in the same kernel pass -- no contiguous B=1 cache
+        or copy step exists anymore.
+        """
+        total = len(tokens)
+        start = seq.cached_len
+        suffix = np.asarray(tokens[start:], np.int32)
+        s = len(suffix)
+        assert s >= 1, "prefix cache must leave >= 1 token to compute"
+        p = prefill_bucket(s, self.max_len)
+        toks = np.zeros(p, np.int32)
+        toks[:s] = suffix
+        pos = np.full(p, -1, np.int32)
+        pos[:s] = np.arange(start, start + s)
+        # bucket the table width like decode does: the kernel grid walks
+        # one iteration per table entry
+        nbw = min(_next_pow2(max(len(seq.blocks), 1)), self.n_batch_blocks)
+        tables = np.zeros((1, nbw), np.int32)   # pad entries: null block
+        tables[0, :len(seq.blocks)] = seq.blocks
+        jpos = jnp.asarray(pos)[None]
+        batch = {"tokens": jnp.asarray(toks)[None],
+                 "positions": jpos,
+                 "last_idx": jnp.asarray([s - 1], jnp.int32)}
+        if self.cfg.family == "vlm":
+            batch["positions"] = jnp.broadcast_to(jpos[None], (3, 1, p))
+            batch["patch_embeds"] = jnp.zeros(
+                (1, min(self.cfg.n_patches, p), self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype))
+        caches = self.pool.step_caches(
+            tables, np.asarray([start], np.int32))
+        logits, caches = prefill_step_bucketed(
+            self.params, batch, caches, self.cfg, self.quant)
+        self.pool.absorb(caches)
+        seq.length = total
         if seq.req.out:
             # re-admission after preemption: the pending input token is
             # already known; the recomputed logits would reproduce it
             seq.last_tok = seq.req.out[-1]
         else:
             seq.last_tok = self._sample_token(
-                np.asarray(logits[0], np.float32), seq.temperature)
+                np.asarray(logits[0], np.float32), seq)
             seq.req.out.append(seq.last_tok)
 
     def _decode_bucket(self, n: int) -> int:
@@ -406,7 +482,7 @@ class Engine:
         logits = np.asarray(logits, np.float32)
         self.steps += 1
         for i, seq in enumerate(list(running)):
-            seq.last_tok = self._sample_token(logits[i], seq.temperature)
+            seq.last_tok = self._sample_token(logits[i], seq)
             seq.req.out.append(seq.last_tok)
             seq.length += 1
             if len(seq.req.out) >= seq.req.max_new_tokens \

@@ -22,19 +22,48 @@ Block 0 is the reserved **null block**: never allocated, its positions
 stay -1, and block-table padding points at it -- a padded or inactive
 lane therefore reads only masked slots and contributes exactly 0.
 
-Invariants the pool maintains:
-* freshly allocated blocks have all positions reset to -1 (stale
-  positions from a freed request could otherwise pass the causal mask);
-* prefill copies a contiguous B=1 cache's packed planes verbatim
-  (:meth:`PagedKVPool.write_prefill`), so paged decode is token-identical
-  to the contiguous engine at equal ``kv_bits``;
-* decode steps receive the pool with this batch's ``block_tables`` /
-  ``length`` injected per layer (:meth:`step_caches`) and give updated
-  pool leaves back through :meth:`absorb`.
+Sharing (copy-on-write prefix cache).  Blocks are *refcounted*: several
+requests may map the same physical block through their tables (the
+serving analogue of the paper's §4.2 rule of never re-moving data that
+is already resident in fast memory -- here, never re-prefilling a
+prompt prefix whose packed planes already sit in the pool).  Blocks are
+content-addressed by a **prompt-token-chain hash**: the key of block
+``j`` commits to every token from position 0 through the end of the
+block, so a hash hit means the whole prefix matches (token contents are
+additionally compared exactly -- a hash collision can cost a missed
+hit, never a wrong one).  :meth:`release` drops a reference; a block
+reaching refcount 0 is not reclaimed but parked in an LRU cache and
+only :meth:`alloc` evicts it when the free list runs dry.  A write to a
+block with refcount > 1 must go through :meth:`cow` (copy-on-write):
+the writer gets a private copy, the shared block stays immutable for
+its other readers.
+
+Safety argument for shared *partial* blocks (a tail block whose slots
+``[0, filled)`` are valid for the sharer): every slot a sharer did not
+itself (over)write holds a token at an absolute position >= the
+sharer's own write frontier, so the causal mask (``kv_pos <= q_pos``)
+excludes it from every one of the sharer's reads until the sharer has
+replaced it.  Writers still must COW while refcount > 1 so a block
+never mutates under a *live* reader's table.
+
+Invariants the pool maintains (see :meth:`validate`):
+* the null block is never allocated, shared, indexed or freed;
+* freshly allocated (and LRU-evicted) blocks have positions reset to -1
+  (stale positions from a freed request could otherwise pass the causal
+  mask);
+* every non-free block has a refcount >= 0; refcount-0 blocks are
+  exactly the LRU-cached ones, and only indexed blocks are cached;
+* a prefix-index entry's recorded token chain always matches the
+  tokens whose KV the block holds (in slots ``[0, filled)``);
+* decode/prefill steps receive the pool with this batch's
+  ``block_tables`` / ``length`` injected per layer (:meth:`step_caches`)
+  and give updated pool leaves back through :meth:`absorb`.
 """
 
 from __future__ import annotations
 
+import dataclasses
+from collections import OrderedDict
 from typing import Optional
 
 import jax.numpy as jnp
@@ -44,6 +73,17 @@ from repro.models import model as M
 from repro.models.config import ModelConfig, QuantConfig, effective_kv_bits
 
 _KV_KEYS = ("k", "v", "k_scale", "v_scale", "pos")
+
+# root of every prompt-token chain hash (any fixed value works; chains
+# are only compared within one pool's lifetime)
+_CHAIN_ROOT = hash(("paged-kv-prefix-root",))
+
+
+def _chain_hash(prev: int, tokens: tuple) -> int:
+    """Extend a prompt-chain hash by one block's tokens.  The chain
+    commits to every token since position 0, so equal hashes (plus the
+    exact token compare on lookup) mean equal full prefixes."""
+    return hash((prev, tokens))
 
 
 def supports_paging(cfg: ModelConfig) -> bool:
@@ -56,16 +96,44 @@ def supports_paging(cfg: ModelConfig) -> bool:
                     for i in range(cfg.n_layers)))
 
 
+@dataclasses.dataclass
+class _BlockMeta:
+    """Prefix-index record for one cached/cacheable block."""
+    prefix_hash: int       # chain hash of everything BEFORE this block
+    start: int             # absolute position of the block's first token
+    tokens: tuple          # tokens resident in slots [0, len(tokens))
+
+    @property
+    def filled(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def key(self) -> int:
+        return _chain_hash(self.prefix_hash, self.tokens)
+
+
+@dataclasses.dataclass
+class PrefixHit:
+    """Result of :meth:`PagedKVPool.acquire_prefix` (refcounts already
+    bumped on ``ids``)."""
+    ids: list              # acquired blocks, chain order
+    cached_len: int        # prompt tokens covered (KV already resident)
+    partial: bool          # last id is a partially-filled block
+    filled: int            # valid tokens in that partial block (else 0)
+
+
 class PagedKVPool:
-    """Fixed-size-block pool of packed bipolar KV planes + a free list.
+    """Refcounted copy-on-write pool of packed bipolar KV planes.
 
     ``n_blocks`` counts physical blocks *including* the reserved null
     block 0; capacity available to requests is ``n_usable = n_blocks-1``
-    blocks of ``block_size`` tokens each.
+    blocks of ``block_size`` tokens each.  ``prefix_cache=False``
+    restores PR-2 behavior: no index, release destroys immediately.
     """
 
     def __init__(self, cfg: ModelConfig, n_blocks: int, block_size: int,
-                 quant: Optional[QuantConfig] = None):
+                 quant: Optional[QuantConfig] = None, *,
+                 prefix_cache: bool = True):
         assert supports_paging(cfg), \
             f"paged KV pool needs an attention-only decoder, got {cfg.family}"
         kv_bits = effective_kv_bits(cfg, quant)
@@ -77,9 +145,26 @@ class PagedKVPool:
         self.cfg, self.quant = cfg, quant
         self.kv_bits = kv_bits
         self.n_blocks, self.block_size = n_blocks, block_size
+        self.prefix_cache = prefix_cache
         self.caches = M.init_caches(cfg, n_blocks, block_size, quant=quant)
         # LIFO free list, block 0 reserved as the null block
         self._free = list(range(n_blocks - 1, 0, -1))
+        self._ref: dict = {}            # block id -> refcount (>= 0)
+        self._lru: OrderedDict = OrderedDict()   # refcount-0 cached blocks
+        self._meta: dict = {}           # block id -> _BlockMeta
+        self._full_index: dict = {}     # chain hash -> full block id
+        self._partial_index: dict = {}  # prefix chain hash -> partial id
+        # bumped on every state change that could alter an allocation or
+        # prefix-lookup outcome; lets the scheduler memoize a failed
+        # admission probe instead of re-walking the head's chain per step
+        self.version = 0
+        # prefix-cache accounting
+        self.n_prefix_hits = 0
+        self.n_hit_tokens = 0
+        self.n_lookups = 0
+        self.n_lookup_tokens = 0
+        self.n_cow = 0
+        self.n_evictions = 0
 
     # -- accounting ----------------------------------------------------------
     @property
@@ -88,17 +173,33 @@ class PagedKVPool:
 
     @property
     def free_blocks(self) -> int:
-        return len(self._free)
+        """Blocks :meth:`alloc` can hand out *right now*: truly free ones
+        plus refcount-0 cached blocks (evictable)."""
+        return len(self._free) + len(self._lru)
 
     @property
     def used_blocks(self) -> int:
-        return self.n_usable - len(self._free)
+        """Blocks some request currently references (refcount >= 1)."""
+        return self.n_usable - self.free_blocks
+
+    @property
+    def cached_blocks(self) -> int:
+        """Refcount-0 blocks parked in the LRU prefix cache."""
+        return len(self._lru)
+
+    @property
+    def shared_blocks(self) -> int:
+        """Blocks mapped by more than one live block table."""
+        return sum(1 for r in self._ref.values() if r > 1)
+
+    def refcount(self, bid: int) -> int:
+        return self._ref.get(bid, 0)
 
     def blocks_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.block_size)
 
     def report(self, tokens_resident: Optional[int] = None) -> dict:
-        """Occupancy / fragmentation accounting (kv_cache_bytes-style).
+        """Occupancy / fragmentation / sharing accounting.
 
         ``tokens_resident``: total tokens currently cached across
         requests (the scheduler knows; the pool only sees blocks).
@@ -113,6 +214,15 @@ class PagedKVPool:
             kv_bits=self.kv_bits,
             n_usable=self.n_usable, free_blocks=self.free_blocks,
             used_blocks=self.used_blocks,
+            cached_blocks=self.cached_blocks,
+            shared_blocks=self.shared_blocks,
+            max_refcount=max(self._ref.values(), default=0),
+            prefix_hits=self.n_prefix_hits,
+            prefix_hit_tokens=self.n_hit_tokens,
+            prefix_lookups=self.n_lookups,
+            prefix_lookup_tokens=self.n_lookup_tokens,
+            cow_copies=self.n_cow,
+            evictions=self.n_evictions,
             pool_bytes=int(pool_bytes), payload_bytes=int(payload),
             bytes_per_block=int(pool_bytes / max(self.n_blocks, 1)),
             occupancy=self.used_blocks / max(self.n_usable, 1),
@@ -125,16 +235,267 @@ class PagedKVPool:
 
     # -- alloc / free --------------------------------------------------------
     def alloc(self, n: int) -> list:
-        """Pop ``n`` physical blocks and reset their positions to -1."""
-        if n > len(self._free):
+        """Take ``n`` blocks at refcount 1 with positions reset to -1.
+
+        The free list is drained first; when dry, refcount-0 cached
+        blocks are evicted in LRU order (their prefix-index entries are
+        dropped with them)."""
+        if n > self.free_blocks:
             raise RuntimeError(
-                f"pool exhausted: want {n} blocks, {len(self._free)} free")
-        ids = [self._free.pop() for _ in range(n)]
+                f"pool exhausted: want {n} blocks, {self.free_blocks} free")
+        self.version += 1
+        ids = []
+        for _ in range(n):
+            if not self._free:
+                victim, _ = self._lru.popitem(last=False)   # LRU end
+                self._unregister(victim)
+                del self._ref[victim]
+                self._free.append(victim)
+                self.n_evictions += 1
+            bid = self._free.pop()
+            self._ref[bid] = 1
+            ids.append(bid)
         self._reset_pos(ids)
         return ids
 
     def free(self, ids) -> None:
-        self._free.extend(ids)
+        """Destroy blocks outright (no caching), PR-2 style.
+
+        Safe against misuse: freeing an empty list is a no-op; freeing a
+        block that is not live (double-free), freeing the null block, a
+        duplicated id, or a block other tables still reference raises a
+        clear error instead of silently corrupting the free list."""
+        ids = list(ids)
+        if len(set(ids)) != len(ids):
+            raise ValueError(f"free(): duplicate block ids in {ids}")
+        for bid in ids:
+            bid = int(bid)
+            if bid == 0:
+                raise ValueError("free(): block 0 is the reserved null block")
+            if bid not in self._ref:
+                raise ValueError(
+                    f"free(): double free of block {bid} (not live; free "
+                    f"list and prefix cache are intact)")
+            if self._ref[bid] > 1:
+                raise ValueError(
+                    f"free(): block {bid} still has refcount "
+                    f"{self._ref[bid]}; release() the extra references")
+        self.version += 1
+        for bid in ids:
+            self._destroy(int(bid))
+
+    # -- refcounting ---------------------------------------------------------
+    def acquire(self, ids) -> None:
+        """Add one reference per block (a cached block leaves the LRU)."""
+        ids = list(ids)
+        if ids:
+            self.version += 1
+        for bid in ids:
+            bid = int(bid)
+            assert bid != 0 and bid in self._ref, bid
+            if self._ref[bid] == 0:
+                self._lru.pop(bid)
+            self._ref[bid] += 1
+
+    def release(self, ids) -> None:
+        """Drop one reference per block.  At refcount 0 an indexed block
+        parks in the LRU cache (evicted only when :meth:`alloc` runs
+        dry); an unindexed one is destroyed.  With ``prefix_cache=False``
+        refcount 0 always destroys (PR-2 reclamation)."""
+        ids = list(ids)
+        if ids:
+            self.version += 1
+        for bid in ids:
+            bid = int(bid)
+            if self._ref.get(bid, 0) < 1:
+                raise ValueError(
+                    f"release(): block {bid} has no live reference "
+                    f"(double release?)")
+            self._ref[bid] -= 1
+            if self._ref[bid] > 0:
+                continue
+            if self.prefix_cache and bid in self._meta:
+                self._lru[bid] = None          # MRU end
+            else:
+                self._destroy(bid)
+
+    def cow(self, bid: int) -> int:
+        """Copy-on-write: clone ``bid``'s planes into a fresh block and
+        drop one reference on the original.  Callers must route every
+        write to a block with refcount > 1 through here, so shared
+        blocks never mutate under another reader's table."""
+        bid = int(bid)
+        assert self._ref.get(bid, 0) >= 1, bid
+        (new,) = self.alloc(1)
+        idx_new = jnp.asarray([new], jnp.int32)
+        idx_old = jnp.asarray([bid], jnp.int32)
+        for c, stacked in self._attn_caches():
+            for key in _KV_KEYS:
+                if stacked:
+                    c[key] = c[key].at[:, idx_new].set(c[key][:, idx_old])
+                else:
+                    c[key] = c[key].at[idx_new].set(c[key][idx_old])
+        self.release([bid])
+        self.n_cow += 1
+        return new
+
+    def _destroy(self, bid: int) -> None:
+        """Forget a block entirely: index entries dropped, back on the
+        free list.  Positions are reset at the next alloc."""
+        self._unregister(bid)
+        self._ref.pop(bid, None)
+        self._lru.pop(bid, None)
+        self._free.append(bid)
+
+    # -- prefix index --------------------------------------------------------
+    def acquire_prefix(self, tokens) -> PrefixHit:
+        """Longest cached prefix of ``tokens`` whose KV is resident.
+
+        Walks block-size chunks of the prompt chain through the full
+        index, then probes for a cached partial tail block continuing
+        the chain.  Coverage is capped at ``len(tokens) - 1``: the last
+        token must always be recomputed so the caller has logits to
+        sample from.  Every returned block is acquired (refcount +1);
+        token contents AND the recorded prefix hash / start offset are
+        compared exactly, so a chain-hash collision can only cost a
+        miss, never serve KV computed under a different prefix.  Hit
+        statistics are NOT recorded here (a capacity-gated admission
+        may re-probe the same queue head every step): the caller
+        reports a committed admission via :meth:`record_hit`."""
+        tokens = np.asarray(tokens)
+        n = len(tokens)
+        ids: list = []
+        h = _CHAIN_ROOT
+        covered = 0
+        bs = self.block_size
+        if self.prefix_cache:
+            while covered + bs <= n - 1:
+                chunk = tuple(int(t) for t in tokens[covered:covered + bs])
+                bid = self._full_index.get(_chain_hash(h, chunk))
+                if bid is None:
+                    break
+                meta = self._meta[bid]
+                if meta.tokens != chunk or meta.prefix_hash != h \
+                        or meta.start != covered:
+                    break
+                ids.append(bid)
+                h = _chain_hash(h, chunk)
+                covered += bs
+        partial, filled = False, 0
+        if self.prefix_cache:
+            bid = self._partial_index.get(h)
+            if bid is not None and bid not in ids:
+                meta = self._meta[bid]
+                f = meta.filled
+                chunk = tuple(int(t) for t in tokens[covered:covered + f])
+                if 0 < f <= n - 1 - covered and meta.tokens == chunk \
+                        and meta.prefix_hash == h and meta.start == covered:
+                    ids.append(bid)
+                    partial, filled = True, f
+                    covered += f
+        self.acquire(ids)
+        return PrefixHit(ids=ids, cached_len=covered, partial=partial,
+                         filled=filled)
+
+    def record_hit(self, hit: PrefixHit, n_tokens: int) -> None:
+        """Count a *committed* admission in the hit statistics -- one
+        lookup per admitted request.  Probes that failed the capacity
+        gate and released their blocks must not inflate the counters
+        that reports and benchmarks divide by prompt tokens."""
+        self.n_lookups += 1
+        self.n_lookup_tokens += int(n_tokens)
+        if hit.ids:
+            self.n_prefix_hits += 1
+            self.n_hit_tokens += hit.cached_len
+
+    def register_chain(self, tokens, block_ids) -> None:
+        """Index ``block_ids`` under the chain hashes of ``tokens``.
+
+        ``block_ids[j]`` must hold the KV of ``tokens[j*bs:(j+1)*bs]``
+        (the trailing partially-filled block included).  Existing
+        entries win on duplicate content (the newcomer simply stays
+        unindexed and is destroyed at release); a partial entry is
+        replaced only by a longer partial on the same chain."""
+        if not self.prefix_cache:
+            return
+        self.version += 1
+        tokens = np.asarray(tokens)
+        bs = self.block_size
+        h = _CHAIN_ROOT
+        for j, bid in enumerate(block_ids):
+            bid = int(bid)
+            lo = j * bs
+            chunk = tuple(int(t) for t in tokens[lo:lo + bs])
+            if not chunk:
+                break
+            meta = _BlockMeta(prefix_hash=h, start=lo, tokens=chunk)
+            if len(chunk) == bs:
+                key = meta.key
+                cur = self._full_index.get(key)
+                if cur is None:
+                    self._unregister(bid)
+                    self._meta[bid] = meta
+                    self._full_index[key] = bid
+                # else: duplicate content -> keep the incumbent
+                h = key
+            else:                                   # partial tail
+                cur = self._partial_index.get(h)
+                if cur == bid or cur is None \
+                        or self._meta[cur].filled < len(chunk):
+                    if cur is not None and cur != bid:
+                        self._unregister(cur)
+                        if self._ref.get(cur) == 0:   # cached + unindexed
+                            self._destroy(cur)        # -> useless, reclaim
+                    self._unregister(bid)
+                    self._meta[bid] = meta
+                    self._partial_index[h] = bid
+                break                               # chain ends here
+
+    def _unregister(self, bid: int) -> None:
+        meta = self._meta.pop(bid, None)
+        if meta is None:
+            return
+        if meta.filled == self.block_size:
+            if self._full_index.get(meta.key) == bid:
+                del self._full_index[meta.key]
+        elif self._partial_index.get(meta.prefix_hash) == bid:
+            del self._partial_index[meta.prefix_hash]
+
+    # -- invariants (test/debug surface) ------------------------------------
+    def validate(self, check_contents: bool = False) -> None:
+        """Assert the pool's structural invariants; with
+        ``check_contents`` also verify that every indexed block's
+        recorded token chain agrees with the resident positions
+        (hash -> contents agreement)."""
+        free = set(self._free)
+        live = set(self._ref)
+        assert 0 not in free and 0 not in live, "null block entered the pool"
+        assert not (free & live), f"free list ∩ live set: {free & live}"
+        assert len(free) + len(live) == self.n_usable, \
+            (len(free), len(live), self.n_usable)
+        assert all(r >= 0 for r in self._ref.values()), self._ref
+        zero = {b for b, r in self._ref.items() if r == 0}
+        assert zero == set(self._lru), (zero, set(self._lru))
+        assert set(self._meta) <= live, "index entry for a freed block"
+        for key, bid in self._full_index.items():
+            meta = self._meta.get(bid)
+            assert meta is not None and meta.filled == self.block_size
+            assert meta.key == key
+        for h, bid in self._partial_index.items():
+            meta = self._meta.get(bid)
+            assert meta is not None and 0 < meta.filled < self.block_size
+            assert meta.prefix_hash == h
+        if check_contents:
+            for c, stacked in self._attn_caches():
+                pos = np.asarray(c["pos"])
+                if stacked:
+                    pos = pos[0]
+                assert (pos[0] == -1).all(), "null block positions moved"
+                for bid, meta in self._meta.items():
+                    want = meta.start + np.arange(meta.filled)
+                    got = pos[bid, :meta.filled]
+                    assert (got == want).all(), (bid, got, want)
+                break    # one layer suffices: ids address all layers alike
 
     # -- tree plumbing -------------------------------------------------------
     def _attn_caches(self, caches=None):
@@ -157,12 +518,13 @@ class PagedKVPool:
     def write_prefill(self, single, block_ids, n_tokens: int) -> None:
         """Copy a prefilled contiguous B=1 cache into pool blocks.
 
-        ``single``: the cache tree from ``init_caches(cfg, 1, L)`` after
-        a prefill of ``n_tokens`` (its packed planes are bit-identical
-        to what paged decode would have appended, which is what makes
-        paged vs contiguous token-identical).  Slots past ``n_tokens``
-        copy over as pos=-1 (bucketing pads / untouched init) and stay
-        masked until decode overwrites them.
+        Retained as the copy-style oracle for the block-table suffix
+        prefill the engine now runs (`Engine._paged_prefill` writes the
+        bit-identical planes through the paged kernel's scatter path --
+        tests compare the two).  ``single``: the cache tree from
+        ``init_caches(cfg, 1, L)`` after a prefill of ``n_tokens``.
+        Slots past ``n_tokens`` copy over as pos=-1 (bucketing pads /
+        untouched init) and stay masked until decode overwrites them.
         """
         nb = len(block_ids)
         bs = self.block_size
@@ -188,9 +550,11 @@ class PagedKVPool:
                 pc[key] = copy(pc[key], sc[key], stacked)
 
     def step_caches(self, block_tables: np.ndarray, lengths: np.ndarray):
-        """Pool tree for one decode step: each attention cache dict gains
-        this batch's ``block_tables (B, NB)`` and ``length (B,)`` (stacked
-        layers see them broadcast over the leading ``n_units`` dim)."""
+        """Pool tree for one decode/prefill step: each attention cache
+        dict gains this batch's ``block_tables (B, NB)`` and ``length
+        (B,)`` -- the number of tokens already resident, i.e. the write
+        offset of the step's first new token (stacked layers see them
+        broadcast over the leading ``n_units`` dim)."""
         bt = jnp.asarray(block_tables, jnp.int32)
         ln = jnp.asarray(lengths, jnp.int32)
 

@@ -1,20 +1,33 @@
-"""Request scheduler for paged continuous batching.
+"""Request scheduler for paged continuous batching with prefix caching.
 
 Replaces the fixed-slot admission of the contiguous engine: requests are
 admitted FCFS whenever the block pool can hold their prompt, the decode
 batch is assembled from whatever is running (the engine pads it to
 bucketed batch sizes to bound recompiles), and when the pool runs dry
-mid-decode the *youngest* running request is preempted by eviction --
-its blocks freed, the request re-queued at the front for re-prefill of
-prompt + tokens generated so far (recomputation-style preemption, the
-TensorRT-LLM / vLLM policy that needs no swap space).
+mid-decode the *youngest* running request is preempted by eviction.
+
+Admission goes through the pool's prefix cache
+(:meth:`~repro.serving.paged_cache.PagedKVPool.acquire_prefix`): blocks
+whose prompt-chain hash matches the head of the request's token chain
+are *acquired* (refcount + 1, shared through the block table) rather
+than recomputed, and only the suffix is prefilled.  Completion and
+preemption *release* blocks instead of destroying them -- a released
+block parks in the pool's LRU cache until allocation pressure evicts
+it, which turns recompute-preemption into a **warm restart**: the
+re-admitted request re-acquires its own blocks and re-prefills only the
+partial tail.  A decode append into a block another table still maps
+(refcount > 1) first goes through copy-on-write, so shared blocks never
+mutate under a reader.
 
 Per-request state lives in :class:`SequenceState` objects (not parallel
 numpy arrays): cached length, next input token, owned blocks, sampling
-params.  Liveness guarantee: a request whose lifetime block need exceeds
-the pool is rejected at submit time, so the oldest running request can
-always grow -- preemption of everything younger frees enough blocks --
-and the preemption loop terminates.
+params, and the per-request RNG stream (sampling is keyed by
+``(request seed, output index)``, so a preempted-then-resumed request
+reproduces the exact tokens an uncontended run produces even at
+temperature > 0).  Liveness guarantee: a request whose lifetime block
+need exceeds the pool is rejected at submit time, so the oldest running
+request can always grow -- preemption of everything younger frees or
+re-caches enough blocks -- and the preemption loop terminates.
 """
 
 from __future__ import annotations
@@ -35,11 +48,25 @@ class SequenceState:                   # removed from lists by object
     length: int = 0                 # tokens whose KV is resident
     last_tok: int = 0               # next input token
     blocks: list = dataclasses.field(default_factory=list)
+    cached_len: int = 0             # prompt tokens served from the cache
     admitted_at: int = -1           # admission counter (preemption order)
 
     @property
     def temperature(self) -> float:
         return getattr(self.req, "temperature", 0.0)
+
+    def sample_rng(self, index: int) -> np.random.Generator:
+        """Generator for this request's ``index``-th output token.
+
+        Keyed ``(request seed, output index)`` -- stateless, so the
+        draw for token k is the same whether the request ran straight
+        through, was preempted and recomputed, or resumed warm from the
+        prefix cache (the reproducibility contract of recompute
+        preemption at temperature > 0).
+        """
+        seed = getattr(self.req, "seed", None)
+        return np.random.default_rng(
+            np.random.SeedSequence(entropy=(int(seed or 0), index)))
 
     def resume_tokens(self) -> np.ndarray:
         """Tokens to (re-)prefill: the prompt plus every generated token
@@ -50,13 +77,22 @@ class SequenceState:                   # removed from lists by object
             toks.append(np.asarray(self.req.out[:-1], np.int32))
         return np.concatenate(toks)
 
+    def token_chain(self) -> np.ndarray:
+        """Every token whose KV is resident (prompt + fed-back outputs),
+        the chain the pool's prefix index is keyed by."""
+        toks = [np.asarray(self.req.prompt, np.int32)]
+        if self.req.out:
+            toks.append(np.asarray(self.req.out, np.int32))
+        return np.concatenate(toks)[:self.length]
+
 
 class Scheduler:
     """FCFS admission + preemption-by-eviction over a :class:`PagedKVPool`.
 
     The engine drives it: :meth:`admit` before each step (prefilling via
     the engine's callback), :meth:`ensure_append_capacity` to make room
-    for the step's KV append, then :meth:`finish`/:meth:`reject` as
+    for the step's KV append (allocating fresh blocks and copy-on-write
+    copies of shared ones), then :meth:`finish`/:meth:`reject` as
     requests complete.
     """
 
@@ -68,12 +104,21 @@ class Scheduler:
         self.n_preemptions = 0
         self.n_rejections = 0
         self._admit_counter = 0
+        # (head request, pool.version) of the last admission probe that
+        # failed the capacity gate: while neither changes, re-probing
+        # would re-walk the head's whole chain (hashing + refcount
+        # churn) every engine step just to fail again
+        self._blocked_head = None
 
     # -- submission ----------------------------------------------------------
     def submit(self, req) -> None:
         """Queue a request; impossible ones are rejected immediately (a
         request longer than the pool must fail cleanly, never hang)."""
         worst = len(req.prompt) + req.max_new_tokens
+        if len(req.prompt) == 0:
+            self.reject(req, "empty prompt (no position to take logits "
+                             "from)")
+            return
         if len(req.prompt) >= self.max_len - 1:
             self.reject(req, f"prompt ({len(req.prompt)} tokens) >= "
                              f"max_len-1 ({self.max_len - 1})")
@@ -93,60 +138,109 @@ class Scheduler:
     # -- admission -----------------------------------------------------------
     def admit(self, prefill_fn) -> None:
         """FCFS: prefill the head of the queue while blocks and batch
-        lanes are available.  ``prefill_fn(seq, tokens)`` runs the
-        engine's prefill and fills ``seq.length``/``seq.last_tok``."""
+        lanes are available.  The pool's prefix cache is consulted
+        first: cached blocks are acquired (shared), a shared partial
+        tail is copy-on-written, and only ``blocks_for(len) - hits``
+        fresh blocks are drawn.  ``prefill_fn(seq, tokens)`` runs the
+        engine's suffix prefill (``seq.cached_len`` tokens are already
+        resident) and fills ``seq.length``/``seq.last_tok``; afterwards
+        the full chain is registered in the prefix index so the *next*
+        same-prefix request hits it."""
         while self.waiting and len(self.running) < self.max_batch:
             req = self.waiting[0]
+            if self._blocked_head is not None \
+                    and self._blocked_head[0] is req \
+                    and self._blocked_head[1] == self.pool.version:
+                break      # nothing changed since this head last failed
             seq = SequenceState(req=req)
             tokens = seq.resume_tokens()
-            need = self.pool.blocks_for(len(tokens))
-            # block-aligned prompts open a fresh block on the first decode
+            hit = self.pool.acquire_prefix(tokens)
+            # a shared partial tail must be copied before the suffix
+            # writes into it (COW); sole-reference tails extend in place
+            cow = hit.partial and self.pool.refcount(hit.ids[-1]) > 1
+            need = self.pool.blocks_for(len(tokens)) - len(hit.ids) \
+                + (1 if cow else 0)
+            # block-aligned chains open a fresh block on the first decode
             # append: admitting without that headroom would get the
             # request preempted (its prefill discarded) on the same step
             headroom = 1 if len(tokens) % self.pool.block_size == 0 else 0
             if need + headroom > self.pool.free_blocks:
-                break                      # FCFS: no skipping the head
+                self.pool.release(hit.ids)     # back to the cache
+                # memoize AFTER the release (it bumps pool.version)
+                self._blocked_head = (req, self.pool.version)
+                break                          # FCFS: no skipping the head
             self.waiting.popleft()
-            seq.blocks = self.pool.alloc(need)
+            self._blocked_head = None
+            seq.blocks = list(hit.ids)
+            if cow:
+                seq.blocks[-1] = self.pool.cow(seq.blocks[-1])
+            if need - (1 if cow else 0):
+                seq.blocks.extend(self.pool.alloc(need - (1 if cow else 0)))
+            seq.cached_len = hit.cached_len
+            self.pool.record_hit(hit, len(tokens))
             seq.admitted_at = self._admit_counter
             self._admit_counter += 1
             prefill_fn(seq, tokens)
+            self.pool.register_chain(tokens, seq.blocks)
             self.running.append(seq)
 
     # -- decode-step capacity ------------------------------------------------
-    def _needs_block(self, seq: SequenceState) -> bool:
-        """True when this step's KV append starts a fresh block."""
-        return seq.length % self.pool.block_size == 0
+    def _append_need(self, seq: SequenceState) -> int:
+        """Blocks this step's KV append costs: 1 fresh block when the
+        chain is block-aligned, 1 COW copy when the write would land in
+        a block another table still maps, else 0."""
+        if seq.length % self.pool.block_size == 0:
+            return 1
+        if self.pool.refcount(seq.blocks[-1]) > 1:
+            return 1
+        return 0
 
     def ensure_append_capacity(self) -> None:
-        """Allocate this step's new blocks, evicting the youngest running
-        request(s) while the pool is short.  Terminates: the oldest
-        request alone always fits (submit-time rejection bounds any
-        single request's lifetime need to the pool size)."""
+        """Allocate this step's new blocks (fresh + copy-on-write),
+        evicting the youngest running request(s) while the pool is
+        short.  Terminates: the oldest request alone always fits
+        (submit-time rejection bounds any single request's lifetime
+        need to the pool size, and preempting every younger request
+        returns all other blocks to refcount 0)."""
         while True:
-            needy = [s for s in self.running if self._needs_block(s)]
-            if len(needy) <= self.pool.free_blocks:
+            need = sum(self._append_need(s) for s in self.running)
+            if need <= self.pool.free_blocks:
                 break
             assert len(self.running) > 1, \
                 "pool cannot hold the oldest request (submit gate broken)"
             self.preempt(max(self.running, key=lambda s: s.admitted_at))
-        if needy:      # one alloc = one pos-reset scatter per layer
-            ids = self.pool.alloc(len(needy))
-            for seq, bid in zip(needy, ids):
+        fresh = [s for s in self.running
+                 if s.length % self.pool.block_size == 0]
+        if fresh:      # one alloc = one pos-reset scatter per layer
+            ids = self.pool.alloc(len(fresh))
+            for seq, bid in zip(fresh, ids):
                 seq.blocks.append(bid)
+        for seq in self.running:
+            if seq.length % self.pool.block_size \
+                    and self.pool.refcount(seq.blocks[-1]) > 1:
+                seq.blocks[-1] = self.pool.cow(seq.blocks[-1])
+
+    def _release_seq(self, seq: SequenceState) -> None:
+        """Register the chain (newly filled blocks become hits for
+        same-prefix requests -- including this one, on warm restart)
+        and drop this table's references."""
+        self.pool.register_chain(seq.token_chain(), seq.blocks)
+        self.pool.release(seq.blocks)
+        seq.blocks = []
 
     def preempt(self, seq: SequenceState) -> None:
-        """Evict: free the blocks, re-queue at the front for re-prefill."""
-        self.pool.free(seq.blocks)
-        seq.blocks = []
+        """Evict: release the blocks (they stay cached until allocation
+        pressure reclaims them), re-queue at the front.  On re-admission
+        the prefix lookup re-acquires whatever survived, so an
+        uncontended pool turns the recompute into a warm restart."""
+        self._release_seq(seq)
         self.running.remove(seq)
         self.waiting.appendleft(seq.req)
         self.n_preemptions += 1
 
     # -- completion ----------------------------------------------------------
     def finish(self, seq: SequenceState) -> None:
-        self.pool.free(seq.blocks)
-        seq.blocks = []
+        self._release_seq(seq)
         self.running.remove(seq)
         seq.req.done = True
 

@@ -1,4 +1,4 @@
-"""Three-impl parity for the paged dequantizing flash-decode kernel.
+"""Three-impl parity for the paged dequantizing flash kernel.
 
 The paged op reads packed bipolar K/V through a per-request block table
 (serving block pool).  Contract (same as every op in repro.kernels.ops):
@@ -8,6 +8,11 @@ tolerance on the same packed buffers; the ``pallas`` path runs the
 identical kernel body on TPU.  Additionally the paged reference must be
 *exactly* the contiguous :func:`ops.kv_cache_attention` on the gathered
 layout -- paging is memory management, not math.
+
+Since ISSUE 3 the kernel also serves block-table *suffix prefill*:
+``Sq > 1`` causal query tokens folded into the query axis (grid tiled
+by ``q_block`` rows), each masked by its own absolute position.  The
+same parity matrix covers that path.
 """
 
 import numpy as np
@@ -22,10 +27,14 @@ RNG = np.random.default_rng(11)
 BITS = [2, 4, 8]
 
 
-def _paged_inputs(bits, *, B=2, H=3, G=2, d=16, bs=8, n_blocks=12, NB=4,
-                  lens=(19, 7)):
+def _paged_inputs(bits, *, B=2, H=3, G=2, sq=1, d=16, bs=8, n_blocks=12,
+                  NB=4, lens=(19, 7)):
     """Random per-request K/V quantized and scattered into pool blocks,
-    plus the equivalent contiguous (gathered) layout as an oracle."""
+    plus the equivalent contiguous (gathered) layout as an oracle.
+
+    ``sq`` > 1 emulates suffix prefill: the query axis carries ``G*sq``
+    rows -- ``sq`` causal tokens per GQA group, positioned at the last
+    ``sq`` positions of each request."""
     dw = bipolar.packed_words(d)
     k_pool = np.zeros((n_blocks, bs, H, bits, dw), np.uint32)
     v_pool = np.zeros_like(k_pool)
@@ -63,9 +72,11 @@ def _paged_inputs(bits, *, B=2, H=3, G=2, d=16, bs=8, n_blocks=12, NB=4,
         vsc_cat[b, :ln] = np.asarray(vs[0])
         pos_cat[b, :ln] = np.arange(ln)
 
-    q = jnp.asarray(RNG.standard_normal((B, H, G, d)), jnp.float32)
-    q_pos = jnp.asarray([[ln - G + i for i in range(G)] for ln in lens],
-                        jnp.int32)
+    q = jnp.asarray(RNG.standard_normal((B, H, G * sq, d)), jnp.float32)
+    # row gi*sq + si is group gi's query for the si-th of the last sq
+    # positions (the layers.attention_apply fold order)
+    q_pos = jnp.asarray([[ln - sq + (r % sq) for r in range(G * sq)]
+                         for ln in lens], jnp.int32)
     paged = (q, jnp.asarray(k_pool), jnp.asarray(k_sc), jnp.asarray(v_pool),
              jnp.asarray(v_sc), jnp.asarray(pool_pos), jnp.asarray(tables),
              q_pos)
@@ -107,6 +118,65 @@ def test_paged_matches_contiguous_on_gathered_layout(bits):
         jnp.repeat(jnp.asarray(pos_cat), H, 0),
         d=d, impl="reference")).reshape(B, H, G, d)
     np.testing.assert_array_equal(y_p, y_c)
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("window", [None, 8])
+def test_paged_sq_gt1_reference_interpret_parity(bits, window):
+    """Suffix-prefill shape: 6 causal query tokens per GQA group, with
+    a q_block of 8 so the 12 padded query rows span two kernel tiles
+    (exercising the scratch re-init at each new query tile)."""
+    paged, _ = _paged_inputs(bits, sq=6, lens=(19, 9))
+    d = paged[0].shape[-1]
+    y_ref = np.asarray(ops.paged_kv_cache_attention(
+        *paged, d=d, window=window, impl="reference"))
+    y_int = np.asarray(ops.paged_kv_cache_attention(
+        *paged, d=d, window=window, q_block=8, impl="interpret"))
+    np.testing.assert_allclose(y_int, y_ref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_paged_sq_gt1_matches_contiguous_on_gathered_layout(bits):
+    """Multi-token causal queries through the block table equal the
+    contiguous quantized-KV attention over the gathered planes exactly
+    (shared reference dataflow): the Sq>1 path changes how queries are
+    batched, not what they compute."""
+    paged, (k_cat, ksc_cat, v_cat, vsc_cat, pos_cat) = _paged_inputs(
+        bits, sq=5, lens=(19, 11))
+    q = paged[0]
+    B, H, GS, d = q.shape
+    T = k_cat.shape[1]
+    y_p = np.asarray(ops.paged_kv_cache_attention(
+        *paged, d=d, impl="reference"))
+
+    fold = lambda a: a.transpose((0, 2, 1) + tuple(
+        range(3, a.ndim))).reshape((B * H, T) + a.shape[3:])
+    y_c = np.asarray(ops.kv_cache_attention(
+        q.reshape(B * H, GS, d),
+        fold(jnp.asarray(k_cat)), fold(jnp.asarray(ksc_cat)),
+        fold(jnp.asarray(v_cat)), fold(jnp.asarray(vsc_cat)),
+        jnp.repeat(paged[-1], H, 0),
+        jnp.repeat(jnp.asarray(pos_cat), H, 0),
+        d=d, impl="reference")).reshape(B, H, GS, d)
+    np.testing.assert_array_equal(y_p, y_c)
+
+
+def test_paged_sq_causality_within_suffix():
+    """Each suffix query must see exactly the prefix plus the suffix
+    tokens at positions <= its own: computing the same rows one
+    query-position at a time (decode-style Sq=1 calls) must agree."""
+    paged, _ = _paged_inputs(8, sq=4, G=2, lens=(17,), B=1)
+    q, kp, ks, vp, vs, pos, tables, q_pos = paged
+    d = q.shape[-1]
+    y_all = np.asarray(ops.paged_kv_cache_attention(
+        q, kp, ks, vp, vs, pos, tables, q_pos, d=d, impl="interpret"))
+    for si in range(4):
+        rows = [g * 4 + si for g in range(2)]
+        y_one = np.asarray(ops.paged_kv_cache_attention(
+            q[:, :, rows], kp, ks, vp, vs, pos, tables, q_pos[:, rows],
+            d=d, impl="interpret"))
+        np.testing.assert_allclose(y_one, y_all[:, :, rows],
+                                   rtol=2e-6, atol=2e-6)
 
 
 def test_paged_null_block_and_inactive_lanes_return_zero():

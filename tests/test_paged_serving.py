@@ -1,15 +1,23 @@
 """Paged serving subsystem: block pool, scheduler policies, and the
 paged engine's equivalence to the contiguous engine.
 
-Key invariants (ISSUE 2 acceptance):
-* paged greedy decode at kv_bits=8 is token-identical to the contiguous
-  engine on the smoke configs;
+Key invariants (ISSUE 2 + ISSUE 3 acceptance):
+* paged greedy decode at kv_bits=8 -- with and without the prefix
+  cache -- is token-identical to the contiguous engine on the smoke
+  configs;
 * pool exhaustion preempts the youngest request, which is re-admitted
-  and still produces the exact same tokens (recompute preemption);
+  (warm-restarting from its own cached blocks when they survive) and
+  still produces the exact same tokens, at temperature 0 AND > 0
+  (per-request RNG keyed by (seed, output index));
+* same-prefix requests share >= 1 full block (refcount > 1) and a
+  write into a shared partial block triggers copy-on-write;
 * a request that could never fit the pool is rejected cleanly;
 * freed blocks return to the free list and are reused;
 * at equal cache bytes the paged pool admits >= 2x the concurrent
   requests of the slot engine on a mixed-length workload.
+
+Pool-level prefix-cache/COW unit and property tests live in
+tests/test_prefix_cache.py (no model forward needed there).
 """
 
 import dataclasses
@@ -85,10 +93,13 @@ def test_pool_requires_kv_bits_and_attention():
 def test_admission_headroom_for_block_aligned_prompts():
     """A prompt that exactly fills its blocks opens a new block on the
     very first decode append; admission must reserve that headroom or
-    the request is preempted (prefill discarded) on the same step."""
+    the request is preempted (prefill discarded) on the same step.
+    (prefix_cache=False: the arange prompts share a prefix, and a cache
+    hit would legitimately shrink b's need -- tested elsewhere.)"""
     from repro.serving.scheduler import Scheduler
     cfg, _ = _setup(n_layers=2)
-    pool = PagedKVPool(cfg, n_blocks=4, block_size=4, quant=_kv8(cfg))
+    pool = PagedKVPool(cfg, n_blocks=4, block_size=4, quant=_kv8(cfg),
+                       prefix_cache=False)
     sch = Scheduler(pool, max_len=32, max_batch=4)
 
     def stub_prefill(seq, tokens):
@@ -201,11 +212,15 @@ def test_request_longer_than_pool_rejected_cleanly():
 
 
 def test_block_freelist_reuse_across_sequential_requests():
+    """PR-2 reclamation semantics, pinned behind prefix_cache=False
+    (with the cache on, released blocks deliberately park in the LRU
+    instead of returning to the free list)."""
     cfg, params = _setup(n_layers=2)
     kv8 = _kv8(cfg)
     rng = np.random.default_rng(5)
     eng = E.Engine(params, cfg, max_len=32, quant=kv8, paged=True,
-                   block_size=4, n_blocks=6, max_batch=1)
+                   block_size=4, n_blocks=6, max_batch=1,
+                   prefix_cache=False)
     used = []
     for i in range(3):
         req = E.Request(prompt=rng.integers(0, cfg.vocab, (6,),
@@ -247,6 +262,182 @@ def test_paged_capacity_2x_contiguous_at_equal_bytes():
         pool.alloc(need)
         admitted += 1
     assert admitted >= 2 * n_slots, (admitted, n_slots)
+
+
+# ---------------------------------------------------------------------------
+# Prefix cache + copy-on-write (engine level)
+# ---------------------------------------------------------------------------
+
+def test_prefix_cache_shares_blocks_and_cow_on_divergence():
+    """Two live requests over the same 12-token prefix (8 = one full
+    block + 4 = a partial tail at block_size=8): the second request must
+    acquire BOTH cached blocks (full block refcount 2 while both run)
+    and, because its continuation diverges inside the shared partial
+    block, copy-on-write it before writing its suffix.  Outputs must
+    match a cold cache-less run token for token."""
+    cfg, params = _setup(n_layers=2)
+    kv8 = _kv8(cfg)
+    rng = np.random.default_rng(5)
+    shared = rng.integers(0, cfg.vocab, (12,), dtype=np.int32)
+    p2 = np.concatenate([shared, [3, 5, 8]]).astype(np.int32)
+
+    eng = E.Engine(params, cfg, n_slots=4, max_len=32, quant=kv8,
+                   paged=True, block_size=8)
+    r1 = E.Request(prompt=shared.copy(), max_new_tokens=6)
+    r2 = E.Request(prompt=p2.copy(), max_new_tokens=4)
+    eng.submit(r1)
+    eng.submit(r2)
+    eng.step()          # both admitted in one admit pass: r1 prefills +
+    rep = eng.report()  # registers, r2 hits r1's blocks in the same call
+    assert rep["prefix_hits"] == 1
+    assert rep["prefix_hit_tokens"] == 12, rep["prefix_hit_tokens"]
+    assert rep["shared_blocks"] >= 1 and rep["max_refcount"] >= 2, \
+        "a full cached block must be mapped by both tables"
+    assert rep["cow_copies"] == 1, \
+        "divergence inside the shared partial tail must copy-on-write"
+    eng.run()
+    eng.pool.validate(check_contents=True)
+
+    for proto in (r1, r2):
+        cold = E.Engine(params, cfg, n_slots=4, max_len=32, quant=kv8,
+                        paged=True, block_size=8, prefix_cache=False)
+        rr = E.Request(prompt=proto.prompt.copy(),
+                       max_new_tokens=proto.max_new_tokens)
+        cold.submit(rr)
+        cold.run()
+        assert rr.out == proto.out, (rr.out, proto.out)
+
+
+def test_prefix_cache_warm_restart_after_finish():
+    """A duplicate prompt submitted after the first request finished
+    must hit the released (LRU-cached) blocks and produce the same
+    greedy tokens -- the serving analogue of §4.2's never-re-move rule:
+    resident packed planes are reused, not recomputed."""
+    cfg, params = _setup(n_layers=2)
+    kv8 = _kv8(cfg)
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab, (12,), dtype=np.int32)
+    eng = E.Engine(params, cfg, n_slots=4, max_len=32, quant=kv8,
+                   paged=True, block_size=4)
+    a = E.Request(prompt=prompt.copy(), max_new_tokens=4)
+    eng.submit(a)
+    eng.run()
+    assert eng.report()["cached_blocks"] > 0, \
+        "released blocks must park in the LRU cache, not the free list"
+    b = E.Request(prompt=prompt.copy(), max_new_tokens=4)
+    eng.submit(b)
+    eng.run()
+    rep = eng.report()
+    assert rep["prefix_hits"] >= 1 and rep["prefix_hit_tokens"] >= 8
+    assert b.out == a.out, (b.out, a.out)
+    eng.pool.validate(check_contents=True)
+
+
+def test_preemption_warm_restart_reproducible_at_temperature():
+    """ISSUE 3 satellite: preempted-then-resumed requests must
+    reproduce the same *sampled* tokens.  Sampling is keyed by
+    (request seed, output index) through SequenceState.sample_rng, so a
+    contended pool (preemptions + warm restarts) and an uncontended one
+    draw identical streams."""
+    cfg, params = _setup(n_layers=2)
+    kv8 = _kv8(cfg)
+
+    def run(n_blocks):
+        rng = np.random.default_rng(7)
+        eng = E.Engine(params, cfg, max_len=32, quant=kv8, paged=True,
+                       block_size=4, n_blocks=n_blocks, max_batch=4)
+        reqs = [E.Request(prompt=rng.integers(0, cfg.vocab, (6,),
+                                              dtype=np.int32),
+                          max_new_tokens=8, temperature=0.8, seed=i)
+                for i in range(3)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        assert all(r.done and r.error is None for r in reqs)
+        return [r.out for r in reqs], eng
+
+    out_small, eng_small = run(7)
+    assert eng_small.scheduler.n_preemptions > 0, \
+        "the 6-usable-block pool must be contended"
+    assert eng_small.pool.n_hit_tokens > 0, \
+        "re-admission must warm-restart from the preempted blocks"
+    out_big, _ = run(40)
+    assert out_small == out_big, \
+        "preemption must not change sampled outputs (per-request RNG)"
+
+
+def test_empty_prompt_rejected_cleanly():
+    """An empty prompt has no position to take logits from: it must be
+    rejected at submit, not crash the suffix prefill mid-run."""
+    cfg, params = _setup(n_layers=2)
+    eng = E.Engine(params, cfg, max_len=32, quant=_kv8(cfg), paged=True,
+                   block_size=4)
+    empty = E.Request(prompt=np.array([], np.int32), max_new_tokens=4)
+    ok = E.Request(prompt=np.arange(5, dtype=np.int32), max_new_tokens=2)
+    eng.submit(empty)
+    eng.submit(ok)
+    eng.run()
+    assert empty.done and empty.error and "empty prompt" in empty.error
+    assert ok.done and ok.error is None and len(ok.out) == 2
+
+
+def test_default_seeds_give_diverse_samples_per_request():
+    """Without an explicit Request.seed the engine assigns a distinct
+    stream per request: identical prompts at temperature > 0 must not
+    collapse onto identical completions."""
+    cfg, params = _setup(n_layers=2)
+    eng = E.Engine(params, cfg, max_len=32, quant=_kv8(cfg), paged=True,
+                   block_size=4)
+    prompt = np.arange(6, dtype=np.int32)
+    reqs = [E.Request(prompt=prompt.copy(), max_new_tokens=8,
+                      temperature=2.0) for _ in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert len({tuple(r.out) for r in reqs}) > 1, \
+        "identical prompts drew from one shared RNG stream"
+    assert len({r.seed for r in reqs}) == 3
+
+
+def test_suffix_prefill_writes_bit_identical_planes():
+    """The block-table suffix prefill (cached_len=0 -> the whole prompt
+    is the suffix) must land byte-identical packed planes in the pool
+    as the PR-2 contiguous-prefill-then-copy path (write_prefill).
+    Quantization is per-token, so the two write paths differ only in
+    routing."""
+    cfg, params = _setup(n_layers=2)
+    kv8 = _kv8(cfg)
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab, (11,), dtype=np.int32)
+
+    # new path: block-table suffix prefill into an empty pool
+    eng = E.Engine(params, cfg, n_slots=2, max_len=32, quant=kv8,
+                   paged=True, block_size=4)
+    eng.submit(E.Request(prompt=prompt.copy(), max_new_tokens=1))
+    eng.scheduler.admit(eng._paged_prefill)
+    new_blocks = list(eng.scheduler.running[0].blocks)
+
+    # old path: contiguous B=1 prefill + verbatim plane copy
+    old = E.Engine(params, cfg, n_slots=2, max_len=32, quant=kv8,
+                   paged=True, block_size=4, prefix_cache=False)
+    old_blocks = old.pool.alloc(old.pool.blocks_for(len(prompt)))
+    _, one = old._bucketed_prefill(prompt)
+    old.pool.write_prefill(one, old_blocks, len(prompt))
+
+    assert len(new_blocks) == len(old_blocks) == 3
+    for (nc, stacked), (oc, _) in zip(eng.pool._attn_caches(),
+                                      old.pool._attn_caches()):
+        for key in ("k", "v", "k_scale", "v_scale", "pos"):
+            for j, (nb, ob) in enumerate(zip(new_blocks, old_blocks)):
+                # compare only slots holding real tokens: tail-block pad
+                # slots legitimately differ (dropped writes vs verbatim
+                # copy of the bucketed cache's quantized pads)
+                n = min((j + 1) * 4, len(prompt)) - j * 4
+                n_leaf = nc[key][:, nb, :n] if stacked else nc[key][nb, :n]
+                o_leaf = oc[key][:, ob, :n] if stacked else oc[key][ob, :n]
+                np.testing.assert_array_equal(np.asarray(n_leaf),
+                                              np.asarray(o_leaf),
+                                              err_msg=key)
 
 
 def test_paged_engine_moe_and_window_arch():

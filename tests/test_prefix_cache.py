@@ -1,0 +1,269 @@
+"""Pool-level tests for the refcounted copy-on-write prefix cache.
+
+No model forward runs here: these exercise PagedKVPool's accounting --
+acquire/release refcounts, the prompt-chain hash index, LRU eviction,
+copy-on-write, and the strict free()/release() misuse errors (ISSUE 3
+satellites).  The property test drives the *real* Scheduler admission /
+append-capacity / preemption / finish paths with a stub prefill and
+asserts the pool invariants plus an external refcount model after every
+step.  Engine-level behavior (token identity, COW on divergence, warm
+restarts) lives in tests/test_paged_serving.py.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:    # property tests skip (not error) without hypothesis
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs import get_config
+from repro.serving.paged_cache import PagedKVPool
+from repro.serving.scheduler import Scheduler
+
+
+def _pool(n_blocks=8, block_size=4, **red):
+    import dataclasses
+    cfg = get_config("llama3-8b").reduced(n_layers=2, **red)
+    kv8 = dataclasses.replace(cfg.quant, w_bits=None, kv_bits=8)
+    return PagedKVPool(cfg, n_blocks=n_blocks, block_size=block_size,
+                       quant=kv8)
+
+
+# ---------------------------------------------------------------------------
+# free()/release() misuse is an error, not silent corruption (satellite)
+# ---------------------------------------------------------------------------
+
+def test_double_free_raises_and_preserves_state():
+    pool = _pool()
+    a = pool.alloc(2)
+    pool.free(a)
+    before = (pool.free_blocks, sorted(pool._free))
+    with pytest.raises(ValueError, match="double free"):
+        pool.free(a)
+    assert (pool.free_blocks, sorted(pool._free)) == before, \
+        "a rejected double-free must leave the free list untouched"
+    pool.free([])          # idempotent no-op on nothing
+    pool.validate()
+
+
+def test_free_rejects_null_block_duplicates_and_shared():
+    pool = _pool()
+    (a,) = pool.alloc(1)
+    with pytest.raises(ValueError, match="null block"):
+        pool.free([0])
+    with pytest.raises(ValueError, match="duplicate"):
+        pool.free([a, a])
+    pool.acquire([a])      # refcount 2: another table still maps it
+    with pytest.raises(ValueError, match="refcount"):
+        pool.free([a])
+    pool.release([a])
+    pool.free([a])
+    with pytest.raises(ValueError, match="double release|no live"):
+        pool.release([a])
+    pool.validate()
+
+
+# ---------------------------------------------------------------------------
+# Refcounts, LRU caching, eviction, COW
+# ---------------------------------------------------------------------------
+
+def _register(pool, tokens, blocks, pos_too=True):
+    """Register a chain and (optionally) write the matching positions so
+    validate(check_contents=True) has something to verify."""
+    if pos_too:
+        import jax.numpy as jnp
+        bs = pool.block_size
+        for j, bid in enumerate(blocks):
+            n = min((j + 1) * bs, len(tokens)) - j * bs
+            if n <= 0:
+                break
+            vals = jnp.arange(j * bs, j * bs + n, dtype=jnp.int32)
+            for c, stacked in pool._attn_caches():
+                if stacked:
+                    c["pos"] = c["pos"].at[:, bid, :n].set(vals)
+                else:
+                    c["pos"] = c["pos"].at[bid, :n].set(vals)
+    pool.register_chain(tokens, blocks)
+
+
+def test_release_caches_then_lru_eviction_reclaims():
+    pool = _pool(n_blocks=6, block_size=4)
+    chain_a = np.arange(8, dtype=np.int32)
+    chain_b = np.arange(100, 108, dtype=np.int32)
+    a = pool.alloc(2)
+    _register(pool, chain_a, a)
+    b = pool.alloc(2)
+    _register(pool, chain_b, b)
+    pool.release(a)
+    pool.release(b)
+    assert pool.cached_blocks == 4 and pool.free_blocks == 5
+    pool.validate(check_contents=True)
+
+    # a full re-lookup hits chain_b (both blocks still cached)
+    hit = pool.acquire_prefix(np.concatenate([chain_b, [9]]))
+    assert hit.cached_len == 8 and [int(i) for i in hit.ids] == list(b)
+    pool.release(hit.ids)
+
+    # allocating past the free list evicts in LRU order: chain_a's
+    # blocks (released first) go before chain_b's
+    pool.alloc(3)
+    assert pool.n_evictions == 2
+    miss = pool.acquire_prefix(np.concatenate([chain_a, [9]]))
+    assert miss.cached_len == 0 and not miss.ids, \
+        "evicted blocks must leave the prefix index"
+    still = pool.acquire_prefix(np.concatenate([chain_b, [9]]))
+    assert still.cached_len >= 4, "LRU must evict oldest-released first"
+    pool.release(still.ids)
+    pool.validate()
+
+
+def test_acquire_prefix_caps_at_len_minus_one():
+    """A full-chain hit must leave >= 1 token to recompute: the caller
+    needs logits at the last position to sample from."""
+    pool = _pool(n_blocks=8, block_size=4)
+    chain = np.arange(8, dtype=np.int32)
+    a = pool.alloc(2)
+    _register(pool, chain, a)
+    pool.release(a)
+    hit = pool.acquire_prefix(chain)       # exact duplicate, block-aligned
+    assert hit.cached_len == 4 and len(hit.ids) == 1, \
+        "the block ending at the last token must not be taken"
+    pool.release(hit.ids)
+
+
+def test_cow_copies_contents_and_drops_one_ref():
+    import jax.numpy as jnp
+    pool = _pool(n_blocks=6, block_size=4)
+    (a,) = pool.alloc(1)
+    for c, stacked in pool._attn_caches():
+        if stacked:
+            c["pos"] = c["pos"].at[:, a].set(jnp.arange(4, dtype=jnp.int32))
+        else:
+            c["pos"] = c["pos"].at[a].set(jnp.arange(4, dtype=jnp.int32))
+    pool.acquire([a])
+    assert pool.refcount(a) == 2
+    b = pool.cow(a)
+    assert b != a and pool.refcount(a) == 1 and pool.refcount(b) == 1
+    for c, stacked in pool._attn_caches():
+        pa = np.asarray(c["pos"])[..., a, :]
+        pb = np.asarray(c["pos"])[..., b, :]
+        np.testing.assert_array_equal(pa, pb)
+    assert pool.n_cow == 1
+    pool.free([a])
+    pool.free([b])
+    pool.validate()
+
+
+def test_hash_hit_verifies_tokens_exactly():
+    """The chain hash routes the lookup but token contents decide: a
+    different chain that happened to collide could only MISS, never
+    alias (we can't force a collision, so check the exact-compare arm:
+    same length, different tokens => miss)."""
+    pool = _pool(n_blocks=8, block_size=4)
+    a = pool.alloc(2)
+    _register(pool, np.arange(8, dtype=np.int32), a)
+    pool.release(a)
+    other = np.concatenate([np.arange(4), [99, 98, 97, 96], [1]]).astype(np.int32)
+    hit = pool.acquire_prefix(other)
+    assert hit.cached_len == 4, "shared first block should hit"
+    miss = pool.acquire_prefix(
+        np.concatenate([[99], np.arange(8)]).astype(np.int32))
+    assert miss.cached_len == 0, "shifted chain must miss from the root"
+    pool.release(hit.ids)
+    pool.validate()
+
+
+# ---------------------------------------------------------------------------
+# Property test: random scheduler walks keep every pool invariant
+# ---------------------------------------------------------------------------
+
+class _Req:
+    """Minimal stand-in for engine.Request (identity the scheduler needs)."""
+    def __init__(self, prompt, max_new_tokens):
+        self.prompt = prompt
+        self.max_new_tokens = max_new_tokens
+        self.temperature = 0.0
+        self.out = []
+        self.done = False
+        self.error = None
+
+
+def _stub_prefill(seq, tokens):
+    seq.length = len(tokens)
+    if seq.req.out:
+        seq.last_tok = seq.req.out[-1]
+    else:
+        seq.last_tok = int(tokens[-1] * 31 % 97)
+        seq.req.out.append(seq.last_tok)
+
+
+def _check(pool, sch):
+    """Pool invariants + external refcount model: at rest, a block's
+    refcount equals the number of running block tables mapping it."""
+    pool.validate()
+    from collections import Counter
+    model = Counter(int(b) for s in sch.running for b in s.blocks)
+    actual = {b: r for b, r in pool._ref.items() if r > 0}
+    assert dict(model) == actual, (dict(model), actual)
+
+
+def _walk(ops, lengths, max_news):
+    """Drive Scheduler+PagedKVPool through a random op sequence."""
+    pool = _pool(n_blocks=9, block_size=4)
+    sch = Scheduler(pool, max_len=32, max_batch=4)
+    # prompts drawn from two base chains so prefixes collide often
+    bases = [np.arange(24, dtype=np.int32),
+             np.concatenate([np.arange(8), np.arange(50, 66)]).astype(np.int32)]
+    for i, op in enumerate(ops):
+        ln = 1 + lengths[i % len(lengths)] % 20
+        if op == 0:                                    # submit + admit
+            base = bases[i % 2]
+            sch.submit(_Req(base[:ln].copy(),
+                            1 + max_news[i % len(max_news)] % 6))
+            sch.admit(_stub_prefill)
+        elif op == 1 and sch.running:                  # one decode step
+            sch.ensure_append_capacity()
+            for s in list(sch.running):
+                tok = int((s.length * 13 + 7) % 97)
+                s.last_tok = tok
+                s.req.out.append(tok)
+                s.length += 1
+                if len(s.req.out) >= s.req.max_new_tokens \
+                        or s.length >= sch.max_len - 1:
+                    sch.finish(s)
+        elif op == 2 and sch.running:                  # preempt youngest
+            sch.preempt(max(sch.running, key=lambda s: s.admitted_at))
+            sch.admit(_stub_prefill)
+        elif op == 3 and sch.running:                  # finish oldest
+            sch.finish(min(sch.running, key=lambda s: s.admitted_at))
+        _check(pool, sch)
+    for s in list(sch.running):                        # drain
+        sch.finish(s)
+    _check(pool, sch)
+    assert pool.free_blocks == pool.n_usable
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 3), min_size=1, max_size=40),
+       st.lists(st.integers(0, 30), min_size=1, max_size=10),
+       st.lists(st.integers(0, 10), min_size=1, max_size=10))
+def test_pool_invariants_under_random_scheduler_walks(ops, lengths, max_news):
+    """Hypothesis sweep (ISSUE 3 satellite): refcounts >= 0 and equal
+    to table multiplicity, the null block never allocated, free list
+    disjoint from the live set, cached-block hash entries agreeing with
+    their recorded contents -- across random
+    submit/decode/preempt/finish interleavings."""
+    _walk(ops, lengths, max_news)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_pool_invariants_seeded_walks(seed):
+    """Deterministic twin of the hypothesis sweep so the invariants run
+    even where hypothesis isn't installed (tier-1 fallback skips the
+    property test, not the coverage)."""
+    rng = np.random.default_rng(seed)
+    _walk(list(rng.integers(0, 4, 60)),
+          list(rng.integers(0, 31, 10)),
+          list(rng.integers(0, 11, 10)))

@@ -37,6 +37,19 @@ memory / tensor-core fragments to the TPU memory hierarchy:
 K padding to the 32-bit word boundary is corrected in closed form by
 pre-loading the accumulator with ``n_pad * (2^{n_a}-1)(2^{n_b}-1)``, so
 arbitrary K is exact.
+
+One-kernel quantized linear (:func:`apmm_fused_linear`): the activation
+operand arrives as *float* tiles plus per-row scales, and the §4.1
+preprocessing (quantize to bipolar-INT, bit-decompose) runs inside the
+GEMM kernel's VMEM prologue -- packed activation planes never exist in
+HBM, so one ``ops.ap_linear`` costs one kernel launch instead of two and
+skips the ``n_a * M * K / 8``-byte packed round trip.  A fused epilogue
+(bias add, none|silu|gelu activation, residual add, and a dual-GEMM
+gate/up mode that streams one A tile against two weight operands and
+writes ``act(gate) * up``) keeps the whole linear in the kernel; every
+epilogue stage round-trips through ``out_dtype`` exactly where the
+unfused composition casts, so fused and unfused outputs are
+*bit-identical* (greedy decode is token-identical by construction).
 """
 
 from __future__ import annotations
@@ -143,6 +156,206 @@ def _kernel(ap_ref, bp_ref, as_ref, bs_ref, out_ref, acc_ref, *,
             out_ref[...] = yf.astype(out_ref.dtype)
         else:
             out_ref[...] = y
+
+
+# ---------------------------------------------------------------------------
+# One-kernel quantized linear: quantize-pack prologue + epilogue in VMEM
+# ---------------------------------------------------------------------------
+
+def _quantize_tile(x, s, n_a: int, k_lo, k_orig: int):
+    """Float tile ``(bm, bk)`` + per-row scale ``(bm, 1)`` -> unsigned
+    bipolar bit field (int32) -- the §4.1 quantize + encode performed in
+    VMEM (same math as :mod:`repro.kernels.pack`).  Columns at absolute
+    index >= ``k_orig`` (K padding) are forced to the all-zero-bit value
+    ``-maxv``, matching the activation pad-bit-0 convention of the
+    closed-form pad correction."""
+    q = bipolar.quantize_values(x.astype(jnp.float32), n_a, s)
+    col = k_lo + jax.lax.broadcasted_iota(jnp.int32, q.shape, 1)
+    q = jnp.where(col < k_orig, q, -bipolar.max_value(n_a))
+    return bipolar.encode(q, n_a)
+
+
+_apply_act = ref.apply_act
+
+
+def _fused_linear_kernel(*refs, n_a: int, n_b: int, bm: int, bn: int,
+                         bk: int, k_orig: int, n_pad: int, variant: str,
+                         act: str, dual: bool, has_bias: bool,
+                         has_res: bool):
+    it = iter(refs)
+    x_ref, as_ref = next(it), next(it)
+    bp_ref, bs_ref = next(it), next(it)
+    bp2_ref = next(it) if dual else None
+    b2s_ref = next(it) if dual else None
+    bias_ref = next(it) if has_bias else None
+    res_ref = next(it) if has_res else None
+    out_ref = next(it)
+    accs = list(it)                       # 1 or 2 scratch accumulators
+
+    k_idx = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    # -- prologue: quantize + bit-decompose the float A tile in VMEM -----
+    # x_ref holds the whole-K row block (index map depends only on i), so
+    # the float activations stream from HBM ONCE per M tile -- not once
+    # per (j, k) grid cell -- and the quantize recompute is VPU-only
+    xk = x_ref[:, pl.dslice(k_idx * bk, bk)]
+    ua = _quantize_tile(xk, as_ref[...], n_a, k_idx * bk, k_orig)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        if variant == "fused":
+            init = jnp.full(
+                (bm, bn),
+                n_pad * bipolar.max_value(n_a) * bipolar.max_value(n_b),
+                jnp.int32)
+        else:
+            init = jnp.full((n_a * n_b, bm, bn), n_pad, jnp.int32)
+        for aref in accs:
+            aref[...] = init
+
+    streams = [(bp_ref, accs[0])] + ([(bp2_ref, accs[1])] if dual else [])
+    for bref, aref in streams:
+        bpl = _unpack(bref[...], n_b, bn, bk)
+        if variant == "fused":
+            for lo_a, sz_a in ref.plane_groups(n_a):
+                mask = (1 << sz_a) - 1
+                va = ((((ua >> lo_a) & mask) << 1)
+                      - bipolar.max_value(sz_a)).astype(jnp.int8)
+                for lo_b, sz_b in ref.plane_groups(n_b):
+                    b8 = _recover_int8(bpl, lo_b, sz_b)
+                    y = jax.lax.dot_general(
+                        va, b8, _NT, preferred_element_type=jnp.int32)
+                    aref[...] += y << (lo_a + lo_b)
+        else:
+            for i in range(n_a):
+                a8 = (((ua >> i) & 1) * 2 - 1).astype(jnp.int8)
+                for j in range(n_b):
+                    b8 = (2 * bpl[j] - 1).astype(jnp.int8)
+                    aref[i * n_b + j] += jax.lax.dot_general(
+                        a8, b8, _NT, preferred_element_type=jnp.int32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _finish():
+        od = out_ref.dtype
+
+        def recover_acc(aref):
+            if variant == "fused":
+                return aref[...]
+            y = jnp.zeros((bm, bn), jnp.int32)
+            for i in range(n_a):
+                for j in range(n_b):
+                    y = y + (aref[i * n_b + j] << (i + j))
+            return y
+
+        # epilogue stages round-trip through out_dtype exactly where the
+        # unfused composition casts, so fused == unfused bitwise
+        yf = recover_acc(accs[0]).astype(jnp.float32) \
+            * as_ref[...] * bs_ref[...]
+        if has_bias:
+            yf = yf + bias_ref[...]
+        yo = yf.astype(od)
+        if dual:
+            y2 = recover_acc(accs[1]).astype(jnp.float32) \
+                * as_ref[...] * b2s_ref[...]
+            h = _apply_act(yo.astype(jnp.float32), act) \
+                * y2.astype(od).astype(jnp.float32)
+            yo = h.astype(od)
+        elif act != "none":
+            yo = _apply_act(yo.astype(jnp.float32), act).astype(od)
+        if has_res:
+            yo = yo + res_ref[...]
+        out_ref[...] = yo
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_a", "n_b", "k_orig", "variant", "act", "block",
+                     "out_dtype", "interpret"))
+def apmm_fused_linear(x: jax.Array, a_scale: jax.Array, bp: jax.Array,
+                      b_scale, *, bp2=None, b2_scale=None, bias=None,
+                      residual=None, n_a: int, n_b: int, k_orig: int,
+                      variant: str = "fused", act: str = "none",
+                      block: tuple = (DEFAULT_BM, DEFAULT_BN, DEFAULT_BK),
+                      out_dtype=jnp.float32,
+                      interpret: bool = False) -> jax.Array:
+    """One-kernel quantized linear ``Y = epilogue(Q(X) @ B^T)``.
+
+    Args:
+      x: ``(M, Kp)`` float activations (K already padded to the packed
+        word width; pad columns are masked in-kernel).
+      a_scale: ``(M, 1)`` f32 per-row activation scales.
+      bp: ``(n_b, N, Kw)`` uint32 packed weight planes (pad bit 1).
+      b_scale: ``(N, 1)`` f32 per-output-channel weight scales.
+      bp2/b2_scale: optional second weight operand (dual-GEMM gate/up
+        mode): the quantized A tile streams against both weights and the
+        epilogue writes ``act(Y1) * Y2`` (SwiGLU: Y1 = gate, Y2 = up).
+      bias: optional ``(N,)``-broadcastable f32 bias, added to Y1 before
+        the out-dtype cast.
+      residual: optional ``(M, N)`` tensor (out_dtype) added after the
+        activation, in out_dtype arithmetic.
+      act: "none" | "silu" | "gelu" epilogue activation.
+      k_orig: unpadded reduction length.
+
+    Shapes must tile exactly (:mod:`repro.kernels.ops` pads and unpads).
+    """
+    m, kp = x.shape
+    n_b_, n, kw = bp.shape
+    assert n_b_ == n_b and kp == kw * bipolar.PACK_WIDTH, (x.shape, bp.shape)
+    bm, bn, bk = block
+    bm, bn = min(bm, m), min(bn, n)
+    bk = min(bk, kp)
+    if bk % bipolar.PACK_WIDTH:
+        raise ValueError(f"bk={bk} must be a multiple of {bipolar.PACK_WIDTH}")
+    if m % bm or n % bn or kp % bk:
+        raise ValueError(f"({m},{n},{kp}) not tiled by ({bm},{bn},{bk})")
+    bk32 = bk // bipolar.PACK_WIDTH
+    dual = bp2 is not None
+    if dual:
+        assert b2_scale is not None and bp2.shape == bp.shape, \
+            (bp.shape, None if bp2 is None else bp2.shape)
+    a_scale = a_scale.reshape(m, 1).astype(jnp.float32)
+    b_scale = b_scale.reshape(1, n).astype(jnp.float32)
+
+    operands = [x, a_scale, bp, b_scale]
+    in_specs = [
+        # whole-K row block, re-fetched only when i changes: activations
+        # cost M*K*itemsize of HBM traffic total, independent of N/bn
+        pl.BlockSpec((bm, kp), lambda i, j, k: (i, 0)),
+        pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+        pl.BlockSpec((n_b, bn, bk32), lambda i, j, k: (0, j, k)),
+        pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+    ]
+    if dual:
+        operands += [bp2, b2_scale.reshape(1, n).astype(jnp.float32)]
+        in_specs += [
+            pl.BlockSpec((n_b, bn, bk32), lambda i, j, k: (0, j, k)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ]
+    if bias is not None:
+        operands.append(bias.reshape(1, n).astype(jnp.float32))
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
+    if residual is not None:
+        operands.append(residual.reshape(m, n).astype(out_dtype))
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)))
+
+    acc_shape = ((bm, bn) if variant == "fused" else (n_a * n_b, bm, bn))
+    scratch = [pltpu.VMEM(acc_shape, jnp.int32) for _ in range(1 + dual)]
+    kernel = functools.partial(
+        _fused_linear_kernel, n_a=n_a, n_b=n_b, bm=bm, bn=bn, bk=bk,
+        k_orig=k_orig, n_pad=kp - k_orig, variant=variant, act=act,
+        dual=dual, has_bias=bias is not None, has_res=residual is not None)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, kp // bk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=scratch,
+        compiler_params=compat.compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(*operands)
 
 
 @functools.partial(

@@ -15,16 +15,30 @@ The default comes from ``$REPRO_KERNEL_IMPL`` or the JAX backend
 Dispatch contract: all three impls consume the *same packed buffers* and
 compute the same function -- bit-exactly for the integer GEMM cores,
 to float tolerance for dequantizing ops (kv attention) -- enforced by
-tests/kernels/test_parity.py.  Ops covered: ``quantize_rows`` /
-``pack_weight``, ``ap_matmul`` / ``ap_linear``, and the bipolar
-KV-cache path ``quantize_kv`` / ``dequantize_kv`` /
-``kv_cache_attention`` (dequant-on-read flash attention) /
-``paged_kv_cache_attention`` (same, reading K/V through a serving
-block table -- tests/kernels/test_paged_attention.py).
+tests/kernels/test_parity.py.  Ops covered:
+
+* ``quantize_rows`` / ``pack_weight`` -- §4.1 quantize + bit-plane pack;
+* ``ap_matmul`` -- packed-x-packed NT GEMM (operands packed to different
+  K word-widths are padded to the common width, pad bit 0/1);
+* ``ap_linear`` -- unfused quantized linear: a standalone quantize-pack
+  launch writes the activation planes to HBM, then ``ap_matmul`` reads
+  them back (kept as the fused path's bit-exactness oracle/baseline);
+* ``ap_linear_fused`` -- ONE-kernel quantized linear: activation
+  quantize + decompose run in the GEMM kernel's VMEM prologue (packed
+  activation planes never exist in HBM) and a fused epilogue applies
+  ``bias``, ``act in {none, silu, gelu}``, an optional residual add and
+  a dual-GEMM gate/up mode (``w2``: SwiGLU's two projections share one
+  A-tile stream, ``act(x@w1^T) * (x@w2^T)``).  Bit-identical to the
+  composed unfused pipeline (tests/kernels/test_fused_linear.py);
+* the bipolar KV-cache path ``quantize_kv`` / ``dequantize_kv`` /
+  ``kv_cache_attention`` (dequant-on-read flash attention) /
+  ``paged_kv_cache_attention`` (same, reading K/V through a serving
+  block table -- tests/kernels/test_paged_attention.py).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import os
 from functools import partial
 
@@ -124,6 +138,27 @@ def quantize_rows(x: jax.Array, n_bits: int, *, pad_bit: int,
 # Arbitrary-precision GEMM
 # ---------------------------------------------------------------------------
 
+def _normalize_packed_kw(a: BipolarTensor,
+                         b: BipolarTensor) -> tuple:
+    """Pad operands packed to different K word-widths to the common one.
+
+    Both describe the same logical K; a weight preprocessed offline may
+    carry extra alignment words.  A pads with all-zero bits (-1s), B
+    with all-one bits (+1s) -- the pad conventions the closed-form
+    K-pad correction already accounts for, so the product is unchanged.
+    """
+    assert a.shape[-1] == b.shape[-1], \
+        f"reduction dims differ: {a.shape} vs {b.shape}"
+    kw = max(a.packed.shape[-1], b.packed.shape[-1])
+    if a.packed.shape[-1] < kw:
+        a = dataclasses.replace(
+            a, packed=_pad_dim(a.packed, a.packed.ndim - 1, kw, 0))
+    if b.packed.shape[-1] < kw:
+        b = dataclasses.replace(
+            b, packed=_pad_dim(b.packed, b.packed.ndim - 1, kw, 0xFFFFFFFF))
+    return a, b
+
+
 def ap_matmul(a: BipolarTensor, b: BipolarTensor, *,
               variant: str = "fused", impl: str | None = None,
               out_dtype=jnp.float32, raw: bool = False) -> jax.Array:
@@ -133,6 +168,7 @@ def ap_matmul(a: BipolarTensor, b: BipolarTensor, *,
     values (no scale dequant).
     """
     impl = impl or default_impl()
+    a, b = _normalize_packed_kw(a, b)
     if impl == "reference":
         if raw:
             return ref.apmm_packed_ref(a, b, fused=(variant == "fused"))
@@ -141,7 +177,6 @@ def ap_matmul(a: BipolarTensor, b: BipolarTensor, *,
     (m, k), (n, _) = a.shape, b.shape
     ap, bp = a.packed, b.packed
     kw = ap.shape[-1]
-    assert bp.shape[-1] == kw, "operands packed to different K widths"
     # --- pad to tile multiples ------------------------------------------
     bm = min(apmm_kernel.DEFAULT_BM, _round_up(m, 8))
     bn = min(apmm_kernel.DEFAULT_BN, _round_up(n, 128))
@@ -175,6 +210,104 @@ def ap_linear(x: jax.Array, w: BipolarTensor, *, a_bits: int,
     xq = quantize_rows(x.reshape(-1, k), a_bits, pad_bit=0, impl=impl)
     y = ap_matmul(xq, w, variant=variant, impl=impl, out_dtype=out_dtype)
     return y.reshape(*lead, w.shape[0])
+
+
+def ap_linear_fused(x: jax.Array, w: BipolarTensor, *, a_bits: int,
+                    w2: BipolarTensor | None = None,
+                    bias: jax.Array | None = None,
+                    act: str = "none",
+                    residual: jax.Array | None = None,
+                    variant: str = "fused", impl: str | None = None,
+                    out_dtype=None) -> jax.Array:
+    """One-kernel quantized linear with a fused epilogue (paper §4.2
+    taken to its conclusion: preprocessing AND recovery in fast memory).
+
+    ``y (..., N) = epi(x (..., K) @ W (N, K)^T)`` where the epilogue is
+    ``act(y + bias) [* (x @ W2^T) if w2] [+ residual]``:
+
+    * activation quantize + bit-decompose run inside the GEMM kernel's
+      VMEM prologue -- packed activation planes never round-trip HBM and
+      one linear is ONE kernel launch instead of two;
+    * ``w2`` (dual-GEMM gate/up mode) streams the quantized A tile
+      against a second weight and the epilogue computes
+      ``act(y1) * y2`` -- SwiGLU's two projections share one A stream;
+    * ``bias`` adds in f32 before the out-dtype cast; ``act`` and the
+      out-dtype cast points mirror the unfused composition exactly, and
+      ``residual`` adds in out_dtype -- so the fused path is
+      *bit-identical* to ``ap_linear`` + jnp epilogue (greedy decode is
+      token-identical by construction).
+
+    Dispatch: pallas | interpret run
+    :func:`repro.kernels.apmm.apmm_fused_linear`; reference runs
+    :func:`repro.kernels.ref.ap_linear_fused_ref` (quantize to values,
+    integer GEMM, same epilogue -- no packed activation buffer in the
+    graph at all).
+    """
+    impl = impl or default_impl()
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w.shape[0]
+    assert w.shape[-1] == k, (x.shape, w.shape)
+    if w2 is not None:
+        assert w2.shape == w.shape and w2.n_bits == w.n_bits, \
+            (w.shape, w2.shape)
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    res2 = residual.reshape(m, n) if residual is not None else None
+    # scale computed exactly as quantize_rows does (absmax in the INPUT
+    # dtype, then cast) -- a f32-side absmax would differ in the last
+    # bit for bf16 activations and break fused==unfused bit-identity
+    scale = bipolar.absmax_scale(x2, a_bits, axis=-1, keepdims=True)
+    scale = scale.astype(jnp.float32)
+    if impl == "reference":
+        # the residual adds AFTER the reshape, at the exact graph
+        # position the unfused model-level add occupies: XLA-CPU elides
+        # bf16 rounding differently across fusion boundaries, so a
+        # structurally different add site can flip near-tie argmax even
+        # though the arithmetic is identical (the pallas/interpret
+        # kernels add in-kernel, where the rounding is explicit)
+        y = ref.ap_linear_fused_ref(
+            x2, scale, w, w2=w2, bias=bias, residual=None, a_bits=a_bits,
+            variant=variant, act=act, out_dtype=out_dtype)
+        y = y.reshape(*lead, n)
+        if residual is not None:
+            y = y + residual.astype(out_dtype)
+        return y
+    # --- pad to tile multiples (kernel masks the K pad in-prologue) -----
+    wp = w.packed
+    w2p = w2.packed if w2 is not None else None
+    kw = max(bipolar.packed_words(k), wp.shape[-1],
+             w2p.shape[-1] if w2p is not None else 0)
+    wp = _pad_dim(wp, 2, kw, 0xFFFFFFFF)
+    if w2p is not None:
+        w2p = _pad_dim(w2p, 2, kw, 0xFFFFFFFF)
+    bm = min(apmm_kernel.DEFAULT_BM, _round_up(m, 8))
+    bn = min(apmm_kernel.DEFAULT_BN, _round_up(n, 128))
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+    kp0 = kw * bipolar.PACK_WIDTH
+    bk = min(apmm_kernel.DEFAULT_BK, _round_up(kp0, 32))
+    kp = _round_up(kp0, bk)
+    xp = _pad_dim(_pad_dim(x2, 1, kp), 0, mp)
+    sp = _pad_dim(scale, 0, mp, 1.0)
+    wp = _pad_dim(_pad_dim(wp, 1, np_), 2, kp // 32, 0xFFFFFFFF)
+    ws = _pad_dim(w.scale.reshape(n, 1), 0, np_, 1.0)
+    kw_args: dict = {}
+    if w2p is not None:
+        kw_args["bp2"] = _pad_dim(_pad_dim(w2p, 1, np_), 2, kp // 32,
+                                  0xFFFFFFFF)
+        kw_args["b2_scale"] = _pad_dim(w2.scale.reshape(n, 1), 0, np_, 1.0)
+    if bias is not None:
+        kw_args["bias"] = _pad_dim(
+            bias.reshape(n, 1).astype(jnp.float32), 0, np_)
+    if res2 is not None:
+        kw_args["residual"] = _pad_dim(
+            _pad_dim(res2.astype(out_dtype), 1, np_), 0, mp)
+    y = apmm_kernel.apmm_fused_linear(
+        xp, sp, wp, ws, n_a=a_bits, n_b=w.n_bits, k_orig=k,
+        variant=variant, act=act, block=(bm, bn, bk), out_dtype=out_dtype,
+        interpret=(impl == "interpret"), **kw_args)
+    return y[:m, :n].reshape(*lead, n)
 
 
 def pack_weight(w: jax.Array, n_bits: int, *,

@@ -161,6 +161,73 @@ def gather_paged_kv(pool_leaf: jax.Array,
     return g.reshape((b, nb * bs) + pool_leaf.shape[2:])
 
 
+# ---------------------------------------------------------------------------
+# Fused quantized linear (quantize-in-graph + epilogue), pure jnp
+# ---------------------------------------------------------------------------
+
+def apply_act(y: jax.Array, act: str) -> jax.Array:
+    """Epilogue activation (shared by kernel and reference paths)."""
+    if act == "silu":
+        return jax.nn.silu(y)
+    if act == "gelu":
+        return jax.nn.gelu(y)
+    assert act == "none", act
+    return y
+
+
+def _linear_int_core(q: jax.Array, w: BipolarTensor, n_a: int,
+                     variant: str) -> jax.Array:
+    """Exact int32 NT GEMM of quantized activation *values* ``q (M, K)``
+    against a packed weight, K-pad corrected.
+
+    The activation side never exists as packed planes -- the reference
+    twin of the in-VMEM quantize prologue of
+    :func:`repro.kernels.apmm.apmm_fused_linear`."""
+    k = w.shape[-1]
+    assert q.shape[-1] == k, (q.shape, w.shape)
+    kp = w.packed.shape[-1] * bipolar.PACK_WIDTH
+    vals = bipolar.recover(bipolar.unpack_planes(w.packed, -1, kp),
+                           w.n_bits)                 # pads -> +maxw
+    if kp > k:   # activation pad columns: all-zero bits = -maxa
+        q = jnp.pad(q, ((0, 0), (0, kp - k)),
+                    constant_values=-bipolar.max_value(n_a))
+    if variant == "fused":
+        y = apmm_fused(q, vals, n_a, w.n_bits)
+    else:
+        y = apmm_bitserial(q, vals, n_a, w.n_bits)
+    return y + (kp - k) * bipolar.max_value(n_a) * bipolar.max_value(w.n_bits)
+
+
+def ap_linear_fused_ref(x2: jax.Array, a_scale: jax.Array,
+                        w: BipolarTensor, *, w2=None, bias=None,
+                        residual=None, a_bits: int, variant: str = "fused",
+                        act: str = "none",
+                        out_dtype=jnp.float32) -> jax.Array:
+    """Reference fused linear: quantize activations to *values* (no HBM
+    packing round trip), integer GEMM(s), then the epilogue with the
+    same out-dtype cast points as the Pallas kernel -- bit-identical to
+    both the kernel and the unfused quantize_rows -> ap_matmul ->
+    jnp-epilogue composition."""
+    q = bipolar.quantize_values(x2.astype(jnp.float32), a_bits, a_scale)
+    a_s = a_scale.reshape(-1, 1).astype(jnp.float32)
+    yf = _linear_int_core(q, w, a_bits, variant).astype(jnp.float32) \
+        * a_s * w.scale.reshape(1, -1)
+    if bias is not None:
+        yf = yf + bias.reshape(1, -1).astype(jnp.float32)
+    yo = yf.astype(out_dtype)
+    if w2 is not None:
+        y2 = _linear_int_core(q, w2, a_bits, variant).astype(jnp.float32) \
+            * a_s * w2.scale.reshape(1, -1)
+        h = apply_act(yo.astype(jnp.float32), act) \
+            * y2.astype(out_dtype).astype(jnp.float32)
+        yo = h.astype(out_dtype)
+    elif act != "none":
+        yo = apply_act(yo.astype(jnp.float32), act).astype(out_dtype)
+    if residual is not None:
+        yo = yo + residual.astype(out_dtype)
+    return yo
+
+
 def apmm_dequant_ref(a: BipolarTensor, b: BipolarTensor,
                      fused: bool = True,
                      out_dtype=jnp.float32) -> jax.Array:

@@ -30,11 +30,18 @@ class QuantConfig:
     to the bf16 cache.  Reads dequantize on the fly -- inside the Pallas
     flash-attention kernel on TPU, via jnp recovery under the
     ``reference`` impl (see :mod:`repro.kernels.ops`).
+
+    ``fused_linear`` routes every quantized GEMM through the one-kernel
+    fused linear (``ops.ap_linear_fused``): activation quantize-pack in
+    the GEMM prologue, bias/activation/residual epilogue, dual-GEMM
+    gate/up for SwiGLU.  Bit-identical outputs to the unfused two-launch
+    path -- ``False`` only for A/B benchmarking the unfused baseline.
     """
     w_bits: Optional[int] = None
     a_bits: int = 8
     variant: str = "fused"          # "fused" | "bitserial" (paper-faithful)
     kv_bits: Optional[int] = None   # bipolar KV-cache bits (1..8)
+    fused_linear: bool = True       # one-kernel linear w/ fused epilogue
 
     @property
     def enabled(self) -> bool:

@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.core.bipolar import BipolarTensor
 from repro.kernels import ops
+from repro.kernels.ref import apply_act
 from repro.distributed.sharding import constrain
 from repro.models.config import ModelConfig
 
@@ -49,20 +50,48 @@ def linear_init(key, d_in: int, d_out: int, dtype) -> dict:
     return {"w": (w / np.sqrt(d_in)).astype(dtype)}
 
 
-def linear_apply(params: dict, x: jax.Array, *,
-                 quant=None) -> jax.Array:
-    """``y (..., N) = x (..., K) @ W (N, K)^T`` -- bf16 or arbitrary-precision.
+def _epilogue(y: jax.Array, act: str, residual, dtype) -> jax.Array:
+    """Post-GEMM epilogue in jnp, with the same ordering/cast points the
+    fused kernel uses: activation in f32 on the dtype-cast GEMM output,
+    residual added in the output dtype."""
+    if act != "none":
+        y = apply_act(y.astype(jnp.float32), act).astype(dtype)
+    if residual is not None:
+        y = y + residual.astype(dtype)
+    return y
+
+
+def _use_fused_linear(w, quant) -> bool:
+    return (isinstance(w, BipolarTensor) and quant is not None
+            and quant.enabled and quant.fused_linear)
+
+
+def linear_apply(params: dict, x: jax.Array, *, quant=None,
+                 act: str = "none", residual=None) -> jax.Array:
+    """``y (..., N) = epi(x (..., K) @ W (N, K)^T)`` -- bf16 or
+    arbitrary-precision, with an optional fused epilogue
+    (``act in {none, silu, gelu}``, residual add).
 
     If the weight leaf is a :class:`BipolarTensor` (serving-time quantized
     params) the GEMM runs through the APMM path with on-the-fly activation
-    quantization (paper §3.2/§4).
+    quantization (paper §3.2/§4): the one-kernel fused linear
+    (``quant.fused_linear``, activation quantize-pack in the GEMM
+    prologue + in-kernel epilogue) or the unfused two-launch baseline.
+    Both produce bit-identical outputs; the bf16 path applies the same
+    epilogue in jnp.
     """
     w = params["w"]
+    if _use_fused_linear(w, quant):
+        return ops.ap_linear_fused(x, w, a_bits=quant.a_bits, act=act,
+                                   residual=residual,
+                                   variant=quant.variant, out_dtype=x.dtype)
     if isinstance(w, BipolarTensor):
         assert quant is not None and quant.enabled
-        return ops.ap_linear(x, w, a_bits=quant.a_bits,
-                             variant=quant.variant, out_dtype=x.dtype)
-    return jnp.einsum("...k,nk->...n", x, w.astype(x.dtype))
+        y = ops.ap_linear(x, w, a_bits=quant.a_bits,
+                          variant=quant.variant, out_dtype=x.dtype)
+    else:
+        y = jnp.einsum("...k,nk->...n", x, w.astype(x.dtype))
+    return _epilogue(y, act, residual, x.dtype)
 
 
 def embed_init(key, vocab: int, d_model: int, dtype) -> dict:
@@ -251,14 +280,15 @@ def attention_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
                     cache: Optional[dict] = None,
                     cross_memory: Optional[jax.Array] = None,
                     causal: Optional[bool] = None,
-                    quant=None):
+                    quant=None, residual: Optional[jax.Array] = None):
     """GQA attention over ``x (B, S, d_model)``.
 
     * training / prefill: self-attention over the full sequence.
     * decode: ``cache`` = dict(k, v, pos, index); x is the new token(s),
       K/V are appended at ``index`` and attention runs over the cache.
     * cross: ``cross_memory (B, T, d)`` supplies K/V (enc-dec decoder).
-    Returns ``(out, new_cache)``.
+    ``residual`` (the block input) fuses the residual add into the
+    output projection's epilogue.  Returns ``(out, new_cache)``.
     """
     b, s, _ = x.shape
     h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -321,7 +351,8 @@ def attention_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
             d=dh, causal=causal, window=cfg.window)
         o = o.reshape(b, hk, g, s, dh).transpose(0, 3, 1, 2, 4).reshape(
             b, s, h * dh).astype(x.dtype)
-        return linear_apply(params["wo"], o, quant=quant), new_cache
+        return linear_apply(params["wo"], o, quant=quant,
+                            residual=residual), new_cache
     if cache is not None:
         kv_bits = cache["k"].shape[-2] if "k_scale" in cache else None
         cache_len = cache["k"].shape[1]
@@ -396,14 +427,14 @@ def attention_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
                        score_bf16=cfg.attn_score_bf16)
     o = o.reshape(b, hk, g, s, dh).transpose(0, 3, 1, 2, 4).reshape(
         b, s, h * dh).astype(x.dtype)
-    out = linear_apply(params["wo"], o, quant=quant)
+    out = linear_apply(params["wo"], o, quant=quant, residual=residual)
     return out, new_cache
 
 
 def cross_attention_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
                           memory: Optional[jax.Array] = None,
                           cache: Optional[dict] = None,
-                          quant=None):
+                          quant=None, residual: Optional[jax.Array] = None):
     """Enc-dec cross-attention (no RoPE, non-causal).
 
     Prefill/train: ``memory (B, T, d)`` given -> project K/V (and fill
@@ -461,7 +492,8 @@ def cross_attention_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
                        qp, kv_pos, causal=False, window=None, chunked=chunked)
     o = o.reshape(b, hk, g, s, dh).transpose(0, 3, 1, 2, 4).reshape(
         b, s, h * dh).astype(x.dtype)
-    return linear_apply(params["wo"], o, quant=quant), new_cache
+    return linear_apply(params["wo"], o, quant=quant,
+                        residual=residual), new_cache
 
 
 def make_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
@@ -535,14 +567,29 @@ def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
     return p
 
 
-def mlp_apply(params: dict, x: jax.Array, cfg: ModelConfig, quant=None):
-    up = linear_apply(params["w_up"], x, quant=quant)
+def mlp_apply(params: dict, x: jax.Array, cfg: ModelConfig, quant=None,
+              residual: Optional[jax.Array] = None):
+    """SwiGLU / GELU MLP.  Quantized + ``quant.fused_linear``: SwiGLU's
+    gate and up projections run as ONE dual-GEMM fused-linear launch
+    (shared quantized A-tile stream, ``silu(gate) * up`` fused before
+    the output write) and the down projection fuses the block residual
+    into its epilogue.  ``residual`` (the block input) is added to the
+    down projection's output."""
     if cfg.act == "silu":
-        gate = linear_apply(params["w_gate"], x, quant=quant)
-        h = jax.nn.silu(gate.astype(jnp.float32)) * up.astype(jnp.float32)
+        if _use_fused_linear(params["w_up"]["w"], quant):
+            h = ops.ap_linear_fused(
+                x, params["w_gate"]["w"], w2=params["w_up"]["w"],
+                a_bits=quant.a_bits, act="silu", variant=quant.variant,
+                out_dtype=x.dtype)
+        else:
+            up = linear_apply(params["w_up"], x, quant=quant)
+            gate = linear_apply(params["w_gate"], x, quant=quant)
+            h = (jax.nn.silu(gate.astype(jnp.float32))
+                 * up.astype(jnp.float32)).astype(x.dtype)
     else:
-        h = jax.nn.gelu(up.astype(jnp.float32))
-    return linear_apply(params["w_down"], h.astype(x.dtype), quant=quant)
+        h = linear_apply(params["w_up"], x, quant=quant, act="gelu")
+    return linear_apply(params["w_down"], h, quant=quant,
+                        residual=residual)
 
 
 # ---------------------------------------------------------------------------
@@ -566,13 +613,24 @@ def moe_init(key, cfg: ModelConfig) -> dict:
     return p
 
 
-def _expert_matmul(w, x_eck, quant=None):
+def _expert_quantize(x_eck, a_bits: int):
+    """Per-(expert, row) activation quantization for the expert GEMMs:
+    computed ONCE and shared by the gate and up projections (the
+    reference-dataflow analogue of the fused kernel's single A-tile
+    stream)."""
+    from repro.core import bipolar as bp
+    sx = bp.absmax_scale(x_eck, a_bits, axis=-1)          # (E, C, 1)
+    return bp.quantize_values(x_eck, a_bits, sx), sx      # (E, C, K) int32
+
+
+def _expert_matmul(w, x_eck, quant=None, pre=None):
     """Batched per-expert NT GEMM: ``(E, C, K) x (E, N, K) -> (E, C, N)``.
 
     When ``w`` is a :class:`BipolarTensor` (packed ``(n, E, N, Kw)``, scale
     ``(E, N, 1)``), the GEMM runs the fused-APMM formulation batched over
     E: unpack-and-recover weights to bipolar integers in-registers,
-    quantize activations per (e, c) row, integer einsum, closed-form K-pad
+    quantize activations per (e, c) row (or reuse ``pre`` = the shared
+    ``_expert_quantize`` result), integer einsum, closed-form K-pad
     correction, scale outer product.  Bit-exact with the 2D APMM path.
     """
     from repro.core import bipolar as bp
@@ -581,8 +639,8 @@ def _expert_matmul(w, x_eck, quant=None):
         k = w.shape[-1]
         planes = bp.unpack_planes(w.packed, -1, kp)       # (n, E, N, Kp)
         vals = bp.recover(planes, w.n_bits)               # pads -> +maxw
-        sx = bp.absmax_scale(x_eck, quant.a_bits, axis=-1)  # (E, C, 1)
-        xq = bp.quantize_values(x_eck, quant.a_bits, sx)    # (E, C, K) int32
+        xq, sx = pre if pre is not None \
+            else _expert_quantize(x_eck, quant.a_bits)
         if kp > k:  # pad activations with -maxa (all-zero-bit convention)
             xq = jnp.pad(xq, ((0, 0), (0, 0), (0, kp - k)),
                          constant_values=-bp.max_value(quant.a_bits))
@@ -646,8 +704,12 @@ def moe_apply(params: dict, x: jax.Array, cfg: ModelConfig, quant=None):
     # fold groups into capacity for the expert GEMMs: (E, G*C, d)
     disp_e = disp.transpose(1, 0, 2, 3).reshape(e, g * cap, d)
 
-    up = _expert_matmul(params["w_up"], disp_e, quant)
-    gate = _expert_matmul(params["w_gate"], disp_e, quant)
+    # gate and up share one quantized-activation stream (the dispatched
+    # tokens are quantized once, not once per projection)
+    pre = (_expert_quantize(disp_e, quant.a_bits)
+           if isinstance(params["w_up"], BipolarTensor) else None)
+    up = _expert_matmul(params["w_up"], disp_e, quant, pre)
+    gate = _expert_matmul(params["w_gate"], disp_e, quant, pre)
     h = (jax.nn.silu(gate.astype(jnp.float32)) * up.astype(jnp.float32)
          ).astype(x.dtype)
     out = _expert_matmul(params["w_down"], h, quant)            # (E, G*C, d)

@@ -130,31 +130,47 @@ def init_params(cfg: ModelConfig, key) -> dict:
 def _apply_block(p, x, cfg, mixer_kind, ffn_kind, *, positions, cache,
                  cross_memory=None, cross_params=None, cross_cache=None,
                  quant=None):
-    """One transformer block. Returns (x, (new_cache, new_cross), aux)."""
+    """One transformer block. Returns (x, (new_cache, new_cross), aux).
+
+    Quantized serving with ``quant.fused_linear`` (and the default
+    ``residual_scale == 1``) threads the block input as ``residual``
+    into the attention output projection and the MLP down projection,
+    so the residual add runs in the fused linear's epilogue instead of
+    as a separate XLA op -- bit-identical (the unfused add multiplies
+    ``h`` by 1.0 in the same dtype).
+    """
+    rs = jnp.asarray(cfg.residual_scale, x.dtype)
+    fuse_res = (quant is not None and quant.enabled and quant.fused_linear
+                and cfg.residual_scale == 1.0)
     h = L.norm_apply(p["norm1"], x, cfg)
     if mixer_kind == "attn":
         h, new_cache = L.attention_apply(
-            p["mixer"], h, cfg, positions=positions, cache=cache, quant=quant)
+            p["mixer"], h, cfg, positions=positions, cache=cache,
+            quant=quant, residual=x if fuse_res else None)
+        x = h if fuse_res else x + h.astype(x.dtype) * rs
     else:
         h, new_cache = S.ssm_apply(p["mixer"], h, cfg, cache=cache,
                                    quant=quant)
-    x = x + h.astype(x.dtype) * jnp.asarray(cfg.residual_scale, x.dtype)
+        x = x + h.astype(x.dtype) * rs
     x = constrain(x, "residual")   # SP: keep every residual write
     new_cross = None
     if cross_params is not None:
         hc = L.norm_apply(cross_params["norm"], x, cfg)
         hc, new_cross = L.cross_attention_apply(
             cross_params["attn"], hc, cfg, memory=cross_memory,
-            cache=cross_cache, quant=quant)
-        x = x + hc.astype(x.dtype) * jnp.asarray(cfg.residual_scale, x.dtype)
+            cache=cross_cache, quant=quant,
+            residual=x if fuse_res else None)
+        x = hc if fuse_res else x + hc.astype(x.dtype) * rs
     aux = 0.0
     if ffn_kind != "none":
         h = L.norm_apply(p["norm2"], x, cfg)
         if ffn_kind == "moe":
             h, aux = L.moe_apply(p["ffn"], h, cfg, quant=quant)
+            x = x + h.astype(x.dtype) * rs
         else:
-            h = L.mlp_apply(p["ffn"], h, cfg, quant=quant)
-        x = x + h.astype(x.dtype) * jnp.asarray(cfg.residual_scale, x.dtype)
+            h = L.mlp_apply(p["ffn"], h, cfg, quant=quant,
+                            residual=x if fuse_res else None)
+            x = h if fuse_res else x + h.astype(x.dtype) * rs
         x = constrain(x, "residual")
     return x, (new_cache, new_cross), aux
 

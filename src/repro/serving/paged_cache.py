@@ -97,6 +97,25 @@ def supports_paging(cfg: ModelConfig) -> bool:
 
 
 @dataclasses.dataclass
+class ChainMemo:
+    """Per-owner memo of how far a sequence's chain has already been
+    registered: the first ``n_full`` full blocks of the owner's block
+    list are indexed *by the owner's own blocks* (their entries are
+    stable while the owner holds its references) and ``h`` is the chain
+    hash through them.  :meth:`PagedKVPool.register_chain` resumes from
+    here instead of re-hashing the whole chain -- release/finish/preempt
+    bookkeeping for a length-L chain costs O(new blocks), not O(L)
+    (ROADMAP PR-3 open item).  A block that lost the duplicate race to
+    another physical copy stalls the memo, keeping it re-walkable so it
+    can claim the index once the incumbent is evicted.  Owned by
+    :class:`repro.serving.scheduler.SequenceState`; a fresh state
+    (re-admission after preemption) starts a fresh memo.
+    """
+    n_full: int = 0
+    h: int = _CHAIN_ROOT
+
+
+@dataclasses.dataclass
 class _BlockMeta:
     """Prefix-index record for one cached/cacheable block."""
     prefix_hash: int       # chain hash of everything BEFORE this block
@@ -165,6 +184,9 @@ class PagedKVPool:
         self.n_lookup_tokens = 0
         self.n_cow = 0
         self.n_evictions = 0
+        # block-chunk hashes computed by register_chain (the ChainMemo
+        # resume point keeps this O(new blocks) per call, not O(chain))
+        self.n_chain_hash_ops = 0
 
     # -- accounting ----------------------------------------------------------
     @property
@@ -223,6 +245,7 @@ class PagedKVPool:
             prefix_lookup_tokens=self.n_lookup_tokens,
             cow_copies=self.n_cow,
             evictions=self.n_evictions,
+            chain_hash_ops=self.n_chain_hash_ops,
             pool_bytes=int(pool_bytes), payload_bytes=int(payload),
             bytes_per_block=int(pool_bytes / max(self.n_blocks, 1)),
             occupancy=self.used_blocks / max(self.n_usable, 1),
@@ -408,26 +431,37 @@ class PagedKVPool:
             self.n_prefix_hits += 1
             self.n_hit_tokens += hit.cached_len
 
-    def register_chain(self, tokens, block_ids) -> None:
+    def register_chain(self, tokens, block_ids,
+                       memo: Optional[ChainMemo] = None) -> None:
         """Index ``block_ids`` under the chain hashes of ``tokens``.
 
         ``block_ids[j]`` must hold the KV of ``tokens[j*bs:(j+1)*bs]``
         (the trailing partially-filled block included).  Existing
         entries win on duplicate content (the newcomer simply stays
         unindexed and is destroyed at release); a partial entry is
-        replaced only by a longer partial on the same chain."""
+        replaced only by a longer partial on the same chain.
+
+        ``memo`` (a per-owner :class:`ChainMemo`) resumes the walk after
+        the full blocks a previous call already registered -- their
+        tokens, ids and indexing outcome are immutable while the owner
+        holds its references -- so repeated registration of a growing
+        chain (every release/finish/preempt) hashes only the *new*
+        blocks instead of re-walking the whole chain."""
         if not self.prefix_cache:
             return
         self.version += 1
         tokens = np.asarray(tokens)
         bs = self.block_size
-        h = _CHAIN_ROOT
-        for j, bid in enumerate(block_ids):
-            bid = int(bid)
+        start, h = 0, _CHAIN_ROOT
+        if memo is not None:
+            start, h = min(memo.n_full, len(block_ids)), memo.h
+        for j in range(start, len(block_ids)):
+            bid = int(block_ids[j])
             lo = j * bs
             chunk = tuple(int(t) for t in tokens[lo:lo + bs])
             if not chunk:
                 break
+            self.n_chain_hash_ops += 1
             meta = _BlockMeta(prefix_hash=h, start=lo, tokens=chunk)
             if len(chunk) == bs:
                 key = meta.key
@@ -438,6 +472,13 @@ class PagedKVPool:
                     self._full_index[key] = bid
                 # else: duplicate content -> keep the incumbent
                 h = key
+                # advance the memo only while contiguous AND this block
+                # IS the index entry: a block that lost the duplicate
+                # race must stay re-walkable, so it can be re-indexed
+                # once the incumbent is evicted from the LRU cache
+                if memo is not None and memo.n_full == j \
+                        and self._full_index.get(key) == bid:
+                    memo.n_full, memo.h = j + 1, key
             else:                                   # partial tail
                 cur = self._partial_index.get(h)
                 if cur == bid or cur is None \

@@ -38,7 +38,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.serving.paged_cache import PagedKVPool
+from repro.serving.paged_cache import ChainMemo, PagedKVPool
 
 
 @dataclasses.dataclass(eq=False)       # identity equality: states are
@@ -50,6 +50,10 @@ class SequenceState:                   # removed from lists by object
     blocks: list = dataclasses.field(default_factory=list)
     cached_len: int = 0             # prompt tokens served from the cache
     admitted_at: int = -1           # admission counter (preemption order)
+    # resume point for pool.register_chain: full blocks already indexed
+    # by this owner are skipped, so chain bookkeeping on every
+    # finish/preempt costs O(new blocks), not O(chain length)
+    chain_memo: ChainMemo = dataclasses.field(default_factory=ChainMemo)
 
     @property
     def temperature(self) -> float:
@@ -181,7 +185,8 @@ class Scheduler:
             seq.admitted_at = self._admit_counter
             self._admit_counter += 1
             prefill_fn(seq, tokens)
-            self.pool.register_chain(tokens, seq.blocks)
+            self.pool.register_chain(tokens, seq.blocks,
+                                     memo=seq.chain_memo)
             self.running.append(seq)
 
     # -- decode-step capacity ------------------------------------------------
@@ -224,7 +229,8 @@ class Scheduler:
         """Register the chain (newly filled blocks become hits for
         same-prefix requests -- including this one, on warm restart)
         and drop this table's references."""
-        self.pool.register_chain(seq.token_chain(), seq.blocks)
+        self.pool.register_chain(seq.token_chain(), seq.blocks,
+                                 memo=seq.chain_memo)
         self.pool.release(seq.blocks)
         seq.blocks = []
 

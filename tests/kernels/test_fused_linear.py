@@ -1,0 +1,201 @@
+"""One-kernel fused quantized linear (``ops.ap_linear_fused``).
+
+Contract under test (tests run under reference AND interpret via the CI
+``kernels-impl`` matrix, plus explicit cross-impl checks here):
+
+* the fused path is *bit-identical* to the unfused composition
+  (``quantize_rows`` launch -> ``ap_matmul`` launch -> jnp epilogue) --
+  the property that makes greedy decode token-identical by construction;
+* reference and interpret agree bit-exactly on the integer core and
+  bitwise on the epilogue (same cast points);
+* the epilogue flags (bias, act, residual, dual-GEMM gate/up) compose;
+* the ``bitserial`` variant holds at ``n_bits >= 8`` (where single-group
+  operand recovery would overflow int8) and on non-multiple-of-tile
+  M/N/K shapes;
+* ``ap_matmul`` accepts operands packed to different K word-widths
+  (satellite regression: pad to common width instead of asserting).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+RNG = np.random.default_rng(21)
+
+# (M, N, K): single aligned tile; odd-K pad correction; nothing aligned
+SHAPES = [(8, 128, 64), (5, 33, 70), (130, 257, 100)]
+BITS = [2, 4, 8]
+
+
+def _inputs(m, n, k, w_bits, seed=0):
+    rng = np.random.default_rng((m, n, k, w_bits, seed))
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = ops.pack_weight(
+        jnp.asarray(rng.standard_normal((n, k)), jnp.float32), w_bits,
+        impl="reference")
+    w2 = ops.pack_weight(
+        jnp.asarray(rng.standard_normal((n, k)), jnp.float32), w_bits,
+        impl="reference")
+    bias = jnp.asarray(rng.standard_normal((n,)), jnp.float32)
+    res = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    return x, w, w2, bias, res
+
+
+def _unfused(x, w, *, a_bits, variant, act="none", w2=None, bias=None,
+             residual=None, out_dtype=jnp.bfloat16, impl="reference"):
+    """The composed two-launch pipeline the fused kernel must match
+    bitwise: ap_linear (quantize-pack launch + GEMM launch) + jnp
+    epilogue with the documented cast points."""
+    y = ops.ap_linear(x, w, a_bits=a_bits, variant=variant, impl=impl,
+                      out_dtype=out_dtype)
+    yf = y.astype(jnp.float32)
+    if bias is not None:
+        # bias adds in f32 before the out-dtype cast, so re-derive the
+        # pre-cast f32 product for the biased oracle
+        wt = ops.ap_matmul(
+            ops.quantize_rows(x.reshape(-1, x.shape[-1]), a_bits,
+                              pad_bit=0, impl=impl),
+            w, variant=variant, impl=impl, out_dtype=jnp.float32)
+        yf = wt.reshape(y.shape) + bias
+        y = yf.astype(out_dtype)
+    if w2 is not None:
+        y2 = ops.ap_linear(x, w2, a_bits=a_bits, variant=variant,
+                           impl=impl, out_dtype=out_dtype)
+        f = jax.nn.silu if act == "silu" else jax.nn.gelu
+        y = (f(y.astype(jnp.float32))
+             * y2.astype(jnp.float32)).astype(out_dtype)
+    elif act != "none":
+        f = jax.nn.silu if act == "silu" else jax.nn.gelu
+        y = f(y.astype(jnp.float32)).astype(out_dtype)
+    if residual is not None:
+        y = y + residual.astype(out_dtype)
+    return y
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=[str(s) for s in SHAPES])
+@pytest.mark.parametrize("w_bits", BITS)
+@pytest.mark.parametrize("variant", ["fused", "bitserial"])
+def test_fused_linear_bit_identical_to_unfused(shape, w_bits, variant):
+    """Plain fused linear == quantize_rows + ap_matmul, bitwise, under
+    both impls -- incl. bitserial at n_bits == 8 and odd M/N/K."""
+    m, n, k = shape
+    x, w, _, _, _ = _inputs(m, n, k, w_bits)
+    for impl in ("reference", "interpret"):
+        y_f = np.asarray(ops.ap_linear_fused(
+            x, w, a_bits=8, variant=variant, impl=impl,
+            out_dtype=jnp.bfloat16), np.float32)
+        y_u = np.asarray(_unfused(x, w, a_bits=8, variant=variant,
+                                  impl=impl), np.float32)
+        np.testing.assert_array_equal(y_f, y_u, err_msg=impl)
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=[str(s) for s in SHAPES])
+@pytest.mark.parametrize("act", ["silu", "gelu"])
+def test_fused_epilogue_act_residual(shape, act):
+    m, n, k = shape
+    x, w, _, _, res = _inputs(m, n, k, 4, seed=1)
+    for impl in ("reference", "interpret"):
+        y_f = np.asarray(ops.ap_linear_fused(
+            x, w, a_bits=8, act=act, residual=res, impl=impl,
+            out_dtype=jnp.bfloat16), np.float32)
+        y_u = np.asarray(_unfused(x, w, a_bits=8, variant="fused",
+                                  act=act, residual=res, impl=impl),
+                         np.float32)
+        np.testing.assert_array_equal(y_f, y_u, err_msg=impl)
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=[str(s) for s in SHAPES])
+@pytest.mark.parametrize("variant", ["fused", "bitserial"])
+def test_fused_dual_gemm_swiglu(shape, variant):
+    """Dual-GEMM gate/up mode: one A-tile stream, silu(gate)*up fused."""
+    m, n, k = shape
+    x, w, w2, _, res = _inputs(m, n, k, 3, seed=2)
+    for impl in ("reference", "interpret"):
+        y_f = np.asarray(ops.ap_linear_fused(
+            x, w, w2=w2, a_bits=8, act="silu", variant=variant,
+            residual=res, impl=impl, out_dtype=jnp.bfloat16), np.float32)
+        y_u = np.asarray(_unfused(x, w, a_bits=8, variant=variant,
+                                  act="silu", w2=w2, residual=res,
+                                  impl=impl), np.float32)
+        np.testing.assert_array_equal(y_f, y_u, err_msg=impl)
+
+
+def test_fused_bias():
+    x, w, _, bias, _ = _inputs(24, 40, 67, 4, seed=3)
+    for impl in ("reference", "interpret"):
+        y_f = np.asarray(ops.ap_linear_fused(
+            x, w, a_bits=8, bias=bias, impl=impl,
+            out_dtype=jnp.float32), np.float32)
+        y_u = np.asarray(_unfused(x, w, a_bits=8, variant="fused",
+                                  bias=bias, out_dtype=jnp.float32,
+                                  impl=impl), np.float32)
+        np.testing.assert_allclose(y_f, y_u, rtol=1e-6, atol=1e-6,
+                                   err_msg=impl)
+
+
+def test_fused_linear_batched_lead_dims():
+    x = jnp.asarray(RNG.standard_normal((2, 3, 96)), jnp.float32)
+    w = ops.pack_weight(jnp.asarray(RNG.standard_normal((17, 96)),
+                                    jnp.float32), 2, impl="reference")
+    for impl in ("reference", "interpret"):
+        y = ops.ap_linear_fused(x, w, a_bits=4, impl=impl)
+        assert y.shape == (2, 3, 17)
+        assert not np.any(np.isnan(np.asarray(y)))
+
+
+def test_fused_linear_close_to_float():
+    """W8A8 fused linear with silu tracks the float reference within
+    quantization error (sanity that the epilogue math is the function
+    we think it is, not just self-consistent)."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((6, 64)) / 4, jnp.float32)
+    wg = jnp.asarray(rng.standard_normal((32, 64)) / 8, jnp.float32)
+    wu = jnp.asarray(rng.standard_normal((32, 64)) / 8, jnp.float32)
+    wgt = ops.pack_weight(wg, 8, impl="reference")
+    wut = ops.pack_weight(wu, 8, impl="reference")
+    y = np.asarray(ops.ap_linear_fused(
+        x, wgt, w2=wut, a_bits=8, act="silu", impl="reference",
+        out_dtype=jnp.float32))
+    xf = np.asarray(x)
+    ref_f = jax.nn.silu(xf @ np.asarray(wg).T) * (xf @ np.asarray(wu).T)
+    rel = np.abs(y - np.asarray(ref_f)).mean() / \
+        (np.abs(np.asarray(ref_f)).mean() + 1e-9)
+    assert rel < 0.05, rel
+
+
+# --- satellite: mixed K word-widths in ap_matmul --------------------------
+
+@pytest.mark.parametrize("impl", ["reference", "interpret"])
+def test_ap_matmul_mixed_k_word_width(impl):
+    """Operands packed to different K word-widths (offline weight
+    alignment padding) must pad to the common width -- A with zero
+    bits, B with one bits -- and produce the identical product."""
+    rng = np.random.default_rng(11)
+    a = jnp.asarray(rng.standard_normal((10, 70)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((9, 70)), jnp.float32)
+    at = ops.quantize_rows(a, 8, pad_bit=0, impl="reference")
+    bt = ops.quantize_rows(b, 3, pad_bit=1, impl="reference")
+    y0 = np.asarray(ops.ap_matmul(at, bt, raw=True, impl=impl))
+    # widen B by one word of all-one pad bits
+    bw = dataclasses.replace(bt, packed=jnp.pad(
+        bt.packed, ((0, 0), (0, 0), (0, 1)),
+        constant_values=np.uint32(0xFFFFFFFF)))
+    np.testing.assert_array_equal(
+        np.asarray(ops.ap_matmul(at, bw, raw=True, impl=impl)), y0)
+    # widen A by two words of all-zero pad bits
+    aw = dataclasses.replace(at, packed=jnp.pad(
+        at.packed, ((0, 0), (0, 0), (0, 2)), constant_values=np.uint32(0)))
+    np.testing.assert_array_equal(
+        np.asarray(ops.ap_matmul(aw, bt, raw=True, impl=impl)), y0)
+    # both widened at once, to different widths
+    np.testing.assert_array_equal(
+        np.asarray(ops.ap_matmul(aw, bw, raw=True, impl=impl)), y0)
+    # dequantizing path survives the width fix too
+    yd0 = np.asarray(ops.ap_matmul(at, bt, impl=impl))
+    yd1 = np.asarray(ops.ap_matmul(aw, bw, impl=impl))
+    np.testing.assert_allclose(yd1, yd0, rtol=1e-6, atol=1e-6)

@@ -53,6 +53,31 @@ def test_ap_linear_reference_interpret_parity(bits, k):
     np.testing.assert_allclose(y_int, y_ref, rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("bits", BITS)          # incl. n_bits == 8
+@pytest.mark.parametrize("k", KS)               # word-aligned and odd K
+@pytest.mark.parametrize("variant", ["fused", "bitserial"])
+def test_ap_linear_fused_reference_interpret_parity(bits, k, variant):
+    """One-kernel fused linear: reference (quantize-to-values jnp
+    dataflow) vs interpret (the Pallas kernel body with the in-VMEM
+    quantize prologue + epilogue).  M=15, N=17 and odd K exercise the
+    non-multiple-of-tile pad/slice path; bitserial at 8 bits covers the
+    regime where single-group operand recovery would overflow int8."""
+    x = jnp.asarray(RNG.standard_normal((3, 5, k)), jnp.float32)
+    wt = ops.pack_weight(jnp.asarray(RNG.standard_normal((17, k)),
+                                     jnp.float32), bits, impl="reference")
+    w2 = ops.pack_weight(jnp.asarray(RNG.standard_normal((17, k)),
+                                     jnp.float32), bits, impl="reference")
+    res = jnp.asarray(RNG.standard_normal((3, 5, 17)), jnp.float32)
+    for kw in ({}, dict(w2=w2, act="silu", residual=res)):
+        y_ref = np.asarray(ops.ap_linear_fused(
+            x, wt, a_bits=8, variant=variant, impl="reference",
+            out_dtype=jnp.float32, **kw))
+        y_int = np.asarray(ops.ap_linear_fused(
+            x, wt, a_bits=8, variant=variant, impl="interpret",
+            out_dtype=jnp.float32, **kw))
+        np.testing.assert_allclose(y_int, y_ref, rtol=1e-5, atol=1e-5)
+
+
 # --- bipolar-quantized KV-cache attention ---------------------------------
 
 def _attn_inputs(bh=4, sq=6, t=37, d=16):

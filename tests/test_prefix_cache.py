@@ -209,6 +209,78 @@ def _check(pool, sch):
     assert dict(model) == actual, (dict(model), actual)
 
 
+def test_register_chain_memo_caps_rehashing():
+    """ChainMemo resume point: repeated registration of a growing chain
+    hashes only the new blocks (ROADMAP PR-3 open item), and the index
+    it builds behaves exactly like a memo-free walk's."""
+    from repro.serving.paged_cache import ChainMemo
+    pool = _pool(n_blocks=20, block_size=4)
+    toks = np.arange(40, dtype=np.int32)
+    blocks = pool.alloc(4)
+    memo = ChainMemo()
+    pool.register_chain(toks[:8], blocks[:2], memo=memo)    # 2 full
+    assert pool.n_chain_hash_ops == 2 and memo.n_full == 2
+    # grow by one full block + a 2-token partial: only they are hashed
+    pool.register_chain(toks[:14], blocks, memo=memo)
+    assert pool.n_chain_hash_ops == 4 and memo.n_full == 3
+    # re-registering the unchanged chain re-walks only the partial tail
+    pool.register_chain(toks[:14], blocks, memo=memo)
+    assert pool.n_chain_hash_ops == 5
+    # a memo-free walk of the same chain re-hashes everything (4 blocks)
+    pool.register_chain(toks[:14], blocks)
+    assert pool.n_chain_hash_ops == 9
+    # the memo-built index serves hits exactly like the rebuilt one
+    hit = pool.acquire_prefix(toks[:16])
+    assert hit.cached_len == 14 and hit.ids == blocks
+    pool.release(hit.ids)
+    pool.validate()
+
+
+def test_memo_lost_race_block_reindexes_after_incumbent_eviction():
+    """A block that lost the duplicate race must STALL the memo (not
+    advance past it), so a later registration can claim the index once
+    the incumbent copy is LRU-evicted -- the memo may never make a
+    chain permanently unindexable."""
+    from repro.serving.paged_cache import ChainMemo
+    pool = _pool(n_blocks=8, block_size=4)
+    toks = np.arange(8, dtype=np.int32)
+    a = pool.alloc(2)                     # incumbent copy of the chain
+    pool.register_chain(toks, a)
+    b = pool.alloc(2)                     # duplicate copy: loses the race
+    memo = ChainMemo()
+    pool.register_chain(toks, b, memo=memo)
+    assert memo.n_full == 0               # stalled, stays re-walkable
+    pool.release(a)                       # incumbent parks in the LRU...
+    pool.alloc(pool.free_blocks)          # ...and is evicted under pressure
+    pool.register_chain(toks, b, memo=memo)
+    assert memo.n_full == 2               # b now owns the index entries
+    hit = pool.acquire_prefix(np.arange(9, dtype=np.int32))
+    assert hit.ids == b and hit.cached_len == 8
+    pool.release(hit.ids)
+    pool.validate()
+
+
+def test_scheduler_chain_bookkeeping_is_incremental():
+    """Finish/preempt-time registration through SequenceState.chain_memo
+    hashes only blocks past the admission memo, not the whole chain."""
+    pool = _pool(n_blocks=32, block_size=4)
+    sch = Scheduler(pool, max_len=64, max_batch=1)
+    sch.submit(_Req(np.arange(16, dtype=np.int32), 20))
+    sch.admit(_stub_prefill)
+    (seq,) = sch.running
+    assert pool.n_chain_hash_ops == 4          # 4 full prompt blocks
+    for _ in range(12):                        # grow 16 -> 28 tokens
+        sch.ensure_append_capacity()
+        tok = int((seq.length * 13 + 7) % 97)
+        seq.req.out.append(tok)
+        seq.last_tok = tok
+        seq.length += 1
+    sch.finish(seq)
+    # chain is 7 blocks; only the 3 past the admission memo are hashed
+    assert pool.n_chain_hash_ops == 7
+    pool.validate()
+
+
 def _walk(ops, lengths, max_news):
     """Drive Scheduler+PagedKVPool through a random op sequence."""
     pool = _pool(n_blocks=9, block_size=4)

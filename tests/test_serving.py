@@ -111,6 +111,44 @@ def test_engine_quantized_serving_runs():
     assert all(len(r.out) == 3 for r in reqs)
 
 
+def test_fused_linear_engine_token_identical_to_unfused():
+    """The one-kernel fused linear (quantize-pack prologue + epilogue,
+    dual-GEMM SwiGLU, fused residual) must greedy-decode EXACTLY the
+    unfused two-launch baseline's tokens -- the epilogue's out-dtype
+    cast points make the two paths bit-identical, so this is equality,
+    not tolerance.  d_head=32 / vocab=512 is the regression config: a
+    structurally different residual-add site once flipped a near-tie
+    argmax here through XLA-CPU's fusion-dependent bf16 rounding."""
+    cfg, params = _setup("llama3-8b", n_layers=2, d_head=32, vocab=512)
+    qcfg = cfg.quant                       # W2A8 + kv8, fused by default
+    assert qcfg.fused_linear
+    qparams = M.quantize_params(params, qcfg)
+    rng = np.random.default_rng(23)
+    prompts = [rng.integers(0, cfg.vocab, (5 + i,), dtype=np.int32)
+               for i in range(3)]
+
+    def run(quant):
+        eng = E.Engine(qparams, cfg, n_slots=2, max_len=32, quant=quant)
+        reqs = [E.Request(prompt=p, max_new_tokens=6) for p in prompts]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        assert all(r.done and len(r.out) == 6 for r in reqs)
+        return [list(r.out) for r in reqs]
+
+    fused = run(qcfg)
+    unfused = run(dataclasses.replace(qcfg, fused_linear=False))
+    assert fused == unfused, (fused, unfused)
+    # stronger: the full-forward logits agree BITWISE
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, 9), dtype=np.int32))
+    logit = {}
+    for q in (qcfg, dataclasses.replace(qcfg, fused_linear=False)):
+        x, _, _ = M.forward(qparams, toks, cfg, quant=q, remat=False)
+        logit[q.fused_linear] = np.asarray(
+            M._logits(qparams, x[:, -1:, :], cfg, q), np.float32)
+    np.testing.assert_array_equal(logit[True], logit[False])
+
+
 def test_engine_matches_direct_greedy_decode():
     """Slot-inserted caches must be content-correct: a 2-slot engine's
     output for one request equals direct prefill+greedy decoding (this

@@ -23,8 +23,17 @@ and cross-checks the analytic pool model against the real
 ``PagedKVPool`` block accounting on a reduced config (same alloc code
 the engine runs).  Results go to ``BENCH_paged_kv.json``.
 
+Sliding-window reclaim (PR 5): ``run_swa_reclaim`` drives the *real*
+pool + scheduler through a long-generation mix at ``window <
+max_len`` and reports steady-state blocks/request vs window size --
+out-of-window blocks roll off the table and return to the pool, so
+steady state is ``~window/block_size + 1`` blocks however long the
+generation runs (an un-reclaimed pool would hold ``length/block_size``).
+Results go to ``BENCH_swa_reclaim.json`` and the CI ``bench-smoke`` job
+gates the bound per PR.
+
 Usage:  PYTHONPATH=src:. python -m benchmarks.paged_kv_capacity \
-            [--out BENCH_paged_kv.json]
+            [--out BENCH_paged_kv.json] [--swa-out BENCH_swa_reclaim.json]
 """
 
 from __future__ import annotations
@@ -151,6 +160,76 @@ def run_empirical() -> dict:
                 occupancy=rep["occupancy"])
 
 
+def run_swa_reclaim(windows=(8, 16, 32), *, block_size=4, max_len=128,
+                    gen_tokens=96, n_requests=3) -> list:
+    """Long-generation sliding-window mix through the real pool +
+    scheduler (stub prefill: block accounting only, no model forward).
+
+    Per window size: peak and steady-state blocks/request over a
+    ``gen_tokens``-token generation, blocks reclaimed by the window,
+    and what an un-reclaimed pool would have held at the end."""
+    import dataclasses as dc
+
+    import jax  # noqa: F401  (pulls in the repro stack)
+    from repro.configs import get_config
+    from repro.serving.paged_cache import PagedKVPool
+    from repro.serving.scheduler import Scheduler
+
+    rows = []
+    for window in windows:
+        cfg = get_config("mixtral-8x7b").reduced(
+            n_layers=2, window=window, max_seq_len=max_len)
+        kv8 = dc.replace(cfg.quant, w_bits=None, kv_bits=8)
+        pool = PagedKVPool(cfg, n_blocks=2 * n_requests * max_len
+                           // block_size + 1,
+                           block_size=block_size, quant=kv8)
+        sch = Scheduler(pool, max_len=max_len, max_batch=n_requests)
+
+        def stub(seq, tokens):
+            seq.length = len(tokens)
+            seq.last_tok = 1
+            if not seq.req.out:
+                seq.req.out.append(1)
+
+        class Req:
+            def __init__(self, prompt, n):
+                self.prompt, self.max_new_tokens = prompt, n
+                self.out, self.done, self.error = [], False, None
+                self.temperature = 0.0
+
+        prompt_len = window // 2 + 3
+        for r in range(n_requests):
+            sch.submit(Req(np.arange(prompt_len, dtype=np.int32) + r,
+                           gen_tokens))
+        sch.admit(stub)
+        peak = steady = length = 0
+        steps = 0
+        while sch.running and steps < gen_tokens:
+            sch.ensure_append_capacity()    # reclaim + per-step allocs
+            for s in list(sch.running):
+                s.req.out.append(1)
+                s.length += 1
+                length = max(length, s.length)   # actual tokens reached
+                if len(s.req.out) >= s.req.max_new_tokens:
+                    sch.finish(s)
+            if sch.running:
+                live = max(len(s.blocks) for s in sch.running)
+                peak = max(peak, live)
+                steady = live    # last observed = steady state
+            steps += 1
+        rows.append(dict(
+            window=window, block_size=block_size,
+            gen_tokens=gen_tokens, final_length=length,
+            peak_blocks_per_request=peak,
+            steady_blocks_per_request=steady,
+            bound_blocks_per_request=window // block_size + 1,
+            unreclaimed_blocks_per_request=-(-length // block_size),
+            window_reclaimed=pool.report()["window_reclaimed"],
+            preemptions=sch.n_preemptions,
+        ))
+    return rows
+
+
 def table(rows: list) -> str:
     hdr = ("| mix | kv_bits | B/token | contiguous | paged | ratio "
            "| frag | decode HBM/step |\n|---|---|---|---|---|---|---|---|\n")
@@ -164,10 +243,26 @@ def table(rows: list) -> str:
     return hdr + "\n".join(out) + "\n"
 
 
+def swa_table(rows: list) -> str:
+    hdr = ("| window | steady blk/req | bound | peak | unreclaimed "
+           "| reclaims |\n|---|---|---|---|---|---|\n")
+    out = []
+    for r in rows:
+        out.append(
+            f"| {r['window']} | {r['steady_blocks_per_request']} | "
+            f"{r['bound_blocks_per_request']} | "
+            f"{r['peak_blocks_per_request']} | "
+            f"{r['unreclaimed_blocks_per_request']} | "
+            f"{r['window_reclaimed']} |")
+    return hdr + "\n".join(out) + "\n"
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_paged_kv.json")
+    ap.add_argument("--swa-out", default="BENCH_swa_reclaim.json")
     ap.add_argument("--skip-empirical", action="store_true")
+    ap.add_argument("--skip-swa", action="store_true")
     args = ap.parse_args()
     rows = run_analytic()
     result = dict(
@@ -189,6 +284,12 @@ def main():
               f"contiguous requests = {e['capacity_ratio']:.1f}x, "
               f"fragmentation {e['fragmentation']*100:.1f}%")
     print(f"wrote {args.out}")
+    if not args.skip_swa:
+        swa = run_swa_reclaim()
+        with open(args.swa_out, "w") as f:
+            json.dump(dict(swa_reclaim=swa), f, indent=1)
+        print(swa_table(swa))
+        print(f"wrote {args.swa_out}")
 
 
 if __name__ == "__main__":

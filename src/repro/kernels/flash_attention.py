@@ -277,20 +277,33 @@ def _kernel_paged(bt_ref, qp_ref, kp_ref, ks_ref, vs_ref, q_ref, kq_ref,
         l_ref[...] = jnp.zeros((bq, 1), jnp.float32)
         acc_ref[...] = jnp.zeros((bq, dp), jnp.float32)
 
-    # one physical block of the pool, routed here by the block table:
-    # kq_ref block is (1, bs, 1, n_bits, dw) -> (bs, n_bits, dw)
-    k = _dequant_tile(kq_ref[0][:, 0], ks_ref[0], n_bits, bs, dp)
-    v = _dequant_tile(vq_ref[0][:, 0], vs_ref[0], n_bits, bs, dp)
-
-    q = q_ref[0, 0]                               # (bq, dp), zero pad cols
-    s = jax.lax.dot_general(q.astype(jnp.float32), k,
-                            (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
+    # position mask first: causal + sliding window by absolute position,
+    # invalid slots (pos -1: null block / freshly allocated) excluded
     qpos = qp_ref[0][:, None]                     # (bq, 1)
     kpos = kp_ref[0][None, :]                     # (1, bs)
     valid = _position_mask(qpos, kpos, causal, window)
-    s = jnp.where(valid, s, -1e30)
-    _online_softmax_update(s, valid, v, m_ref, l_ref, acc_ref)
+
+    # grid skip: a block none of this tile's queries may see -- the
+    # null block behind a padded table entry, a block fully outside
+    # every query's attention window, or (Sq>1 suffix prefill) a block
+    # entirely in this tile's causal future -- contributes exactly
+    # nothing to the online softmax (p = 0, alpha = 1), so the dequant
+    # and both MXU passes are skipped outright.  Out-of-window blocks
+    # normally never reach the kernel at all (the scheduler reclaims
+    # them and the rolling block table bounds the grid itself); this
+    # guard covers the in-between steps and the padded table entries.
+    @pl.when(jnp.any(valid))
+    def _update():
+        # one physical block of the pool, routed here by the block
+        # table: kq_ref block is (1, bs, 1, n_bits, dw) -> (bs, n_bits, dw)
+        k = _dequant_tile(kq_ref[0][:, 0], ks_ref[0], n_bits, bs, dp)
+        v = _dequant_tile(vq_ref[0][:, 0], vs_ref[0], n_bits, bs, dp)
+        q = q_ref[0, 0]                           # (bq, dp), zero pad cols
+        s = jax.lax.dot_general(q.astype(jnp.float32), k,
+                                (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid, s, -1e30)
+        _online_softmax_update(s, valid, v, m_ref, l_ref, acc_ref)
 
     @pl.when(jk == nk - 1)
     def _done():
@@ -325,6 +338,16 @@ def flash_attention_paged_quantized(q: jax.Array,
     Sq``), tiled ``bq`` rows at a time with causal masking by absolute
     position -- the suffix attends through the shared prefix blocks and
     its own freshly written blocks in a single pass.
+
+    Sliding-window attention (``window``) masks ``kv_pos <= q_pos -
+    window`` by absolute position, and the kernel *skips* any block
+    none of the tile's queries may see (fully out-of-window, the null
+    block behind padded table entries, or entirely in the causal
+    future): the masked tile's dequant and MXU work never issue.  With
+    the serving scheduler's out-of-window reclaim the block table
+    itself is a rolling window, so the grid's block axis -- and the HBM
+    the step moves -- stays O(window / block_size) per request however
+    long the generation runs.
 
     Args:
       q: ``(B, H, Gq, Dp)`` -- per-kv-head grouped queries (``Gq`` =

@@ -33,7 +33,11 @@ tests/kernels/test_parity.py.  Ops covered:
 * the bipolar KV-cache path ``quantize_kv`` / ``dequantize_kv`` /
   ``kv_cache_attention`` (dequant-on-read flash attention) /
   ``paged_kv_cache_attention`` (same, reading K/V through a serving
-  block table -- tests/kernels/test_paged_attention.py).
+  block table; with ``window`` set the kernel masks by absolute
+  position and skips blocks no query may see -- null-padded table
+  entries and fully-out-of-window blocks -- matching the scheduler's
+  rolling-table out-of-window reclaim.
+  tests/kernels/test_paged_attention.py covers the window boundaries).
 """
 
 from __future__ import annotations

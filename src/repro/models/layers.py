@@ -331,8 +331,17 @@ def attention_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
         slot = ln[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]  # (B,s)
         valid = pos2d >= 0
         logical = jnp.where(valid, slot // blk, 0)
-        phys = jnp.take_along_axis(bt, logical, 1)
-        phys = jnp.where(valid, phys, n_blocks)     # out of bounds -> drop
+        # sliding-window reclaim: the table is a rolling window whose
+        # entry j maps logical block j + block_offset (leading blocks
+        # already returned to the pool); writes always target the live
+        # suffix, so the index stays in range for every real token
+        boff = cache.get("block_offset")
+        if boff is not None:
+            logical = logical - boff[:, None]
+        entry = jnp.clip(logical, 0, bt.shape[1] - 1)
+        valid_w = valid & (logical >= 0) & (logical < bt.shape[1])
+        phys = jnp.take_along_axis(bt, entry, 1)
+        phys = jnp.where(valid_w, phys, n_blocks)   # out of bounds -> drop
         off = slot % blk
 
         def wr(buf, new):
@@ -431,6 +440,34 @@ def attention_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
     return out, new_cache
 
 
+def _write_cross_slots(cache: dict, ck, cks, cv, cvs, kv_pos) -> dict:
+    """Scatter one batch's projected+packed cross-K/V into its slot-pool
+    rows.  ``cache`` leaves are ``(rows, cap, ...)`` with ``slots (B,)``
+    ids (-1 = padded lane, write dropped).  Rows are written full-width:
+    slots past the batch's encoder length carry pos -1 and stay masked,
+    so a reused slot cannot leak a freed request's memory."""
+    slots = cache["slots"]
+    rows, cap = cache["k"].shape[0], cache["k"].shape[1]
+    t = ck.shape[1]
+    idx = jnp.where(slots >= 0, slots, rows)       # OOB -> dropped
+
+    def pad_t(a, value=0):
+        if cap == t:
+            return a
+        pad = [(0, 0)] * a.ndim
+        pad[1] = (0, cap - t)
+        return jnp.pad(a, pad, constant_values=value)
+
+    def wr(key, new, value=0):
+        buf = cache[key]
+        return buf.at[idx].set(pad_t(new, value).astype(buf.dtype),
+                               mode="drop")
+
+    return dict(cache, k=wr("k", ck), k_scale=wr("k_scale", cks),
+                v=wr("v", cv), v_scale=wr("v_scale", cvs),
+                pos=wr("pos", kv_pos, -1))
+
+
 def cross_attention_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
                           memory: Optional[jax.Array] = None,
                           cache: Optional[dict] = None,
@@ -443,11 +480,17 @@ def cross_attention_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
     cache (``k_scale`` present, :func:`make_cross_cache` with
     ``kv_bits``) stores packed bipolar planes on fill and decodes
     through :func:`repro.kernels.ops.kv_cache_attention`.
-    Returns ``(out, new_cache)``.
+
+    Paged serving hands the cache as *slot-pool rows*: leaves are
+    ``(n_slots+1, cap, ...)`` and ``cache["slots"] (B,)`` maps batch
+    lanes to rows (slot 0 reserved null, -1 = padded lane).  Prefill
+    scatters this request's packed planes into its row; decode gathers
+    the batch's rows back.  Returns ``(out, new_cache)``.
     """
     b, s, _ = x.shape
     h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     g = h // hk
+    slotted = cache is not None and "slots" in cache
     q = linear_apply(params["wq"], x, quant=quant).reshape(b, s, h, dh)
     qg = q.reshape(b, s, hk, g, dh).transpose(0, 2, 3, 1, 4).reshape(
         b, hk, g * s, dh)
@@ -470,18 +513,35 @@ def cross_attention_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
                 ck, cks = ops.quantize_kv(k, kv_bits)
                 cv, cvs = ops.quantize_kv(v, kv_bits)
                 quant_kv = (ck, cks, cv, cvs)
-                new_cache = dict(cache, k=ck, v=cv, k_scale=cks,
-                                 v_scale=cvs, pos=kv_pos)
+                if slotted:
+                    new_cache = _write_cross_slots(cache, ck, cks, cv,
+                                                   cvs, kv_pos)
+                else:
+                    new_cache = dict(cache, k=ck, v=cv, k_scale=cks,
+                                     v_scale=cvs, pos=kv_pos)
             else:
+                assert not slotted, \
+                    "slot-pool cross caches store packed planes: the " \
+                    "paged engine requires kv_bits for audio archs"
                 new_cache = dict(cache, k=k.astype(cache["k"].dtype),
                                  v=v.astype(cache["v"].dtype), pos=kv_pos)
     else:
         assert cache is not None, "cross decode needs a filled cross cache"
-        new_cache, kv_pos = cache, cache["pos"]
-        if "k_scale" in cache:
+        if slotted:
+            # gather this batch's rows; padded lanes (-1) read the null
+            # slot, whose pos stays -1 -> fully masked, contributes 0
+            rows = cache["k"].shape[0]
+            safe = jnp.clip(cache["slots"], 0, rows - 1)
+            quant_kv = (cache["k"][safe], cache["k_scale"][safe],
+                        cache["v"][safe], cache["v_scale"][safe])
+            kv_pos = cache["pos"][safe]
+            new_cache = cache
+        elif "k_scale" in cache:
+            new_cache, kv_pos = cache, cache["pos"]
             quant_kv = (cache["k"], cache["k_scale"],
                         cache["v"], cache["v_scale"])
         else:
+            new_cache, kv_pos = cache, cache["pos"]
             k, v = cache["k"], cache["v"]
     if quant_kv is not None:
         o = _read_quantized_kv(qg, *quant_kv, qp, kv_pos,

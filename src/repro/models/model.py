@@ -184,7 +184,8 @@ def _make_cache_for(cfg: ModelConfig, kind: str, batch: int, max_len: int,
 
 def init_caches(cfg: ModelConfig, batch: int, max_len: int,
                 enc_len: Optional[int] = None,
-                quant: Optional[QuantConfig] = None):
+                quant: Optional[QuantConfig] = None,
+                state_batch: Optional[int] = None):
     """Decode caches: {'prelude': [..], 'blocks': stacked-unit caches,
     ['cross': stacked per-unit cross-KV]}.  ``enc_len`` (audio): encoder
     memory length for the projected cross-K/V cache.  ``quant``: its
@@ -192,28 +193,37 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
     (self- AND cross-attention).
 
     The paged serving pool reuses this layout with ``batch=n_blocks,
-    max_len=block_size``: every leaf's leading (batch, length) dims
-    become (block, in-block slot) and requests address blocks through
-    per-request block tables (:mod:`repro.serving.paged_cache`)."""
+    max_len=block_size``: every attention leaf's leading (batch, length)
+    dims become (block, in-block slot) and requests address blocks
+    through per-request block tables (:mod:`repro.serving.paged_cache`).
+    ``state_batch`` sizes the *fixed-size per-request* state leaves
+    independently of the block count: SSM conv+state and enc-dec
+    cross-K/V caches get ``state_batch`` rows (the pool's slot rows,
+    addressed through per-request slot ids) while attention KV leaves
+    keep ``batch`` blocks.  ``None`` = everything shares ``batch`` (the
+    contiguous layout)."""
     from repro.models.config import effective_kv_bits
     dt = jnp.dtype(cfg.dtype)
     kvb = effective_kv_bits(cfg, quant)
+    sb = batch if state_batch is None else state_batch
     prelude_plan, unit_plan, n_units = plan_split(cfg)
+
+    def cache_for(mk):
+        return _make_cache_for(cfg, mk, batch if mk == "attn" else sb,
+                               max_len, dt, kvb)
+
     caches = {}
     if prelude_plan:
-        caches["prelude"] = [
-            _make_cache_for(cfg, mk, batch, max_len, dt, kvb)
-            for mk, _ in prelude_plan]
+        caches["prelude"] = [cache_for(mk) for mk, _ in prelude_plan]
     unit_caches = [
-        [_make_cache_for(cfg, mk, batch, max_len, dt, kvb)
-         for mk, _ in unit_plan]
+        [cache_for(mk) for mk, _ in unit_plan]
         for _ in range(n_units)]
     caches["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *unit_caches)
     if cfg.family == "audio":
         if enc_len is None:
             from repro.launch.specs import enc_len as _el
             enc_len = _el(cfg, max_len)
-        xc = [[L.make_cross_cache(cfg, batch, enc_len, dt, kv_bits=kvb)
+        xc = [[L.make_cross_cache(cfg, sb, enc_len, dt, kv_bits=kvb)
                for _ in unit_plan] for _ in range(n_units)]
         caches["cross"] = jax.tree.map(lambda *xs: jnp.stack(xs), *xc)
     return caches

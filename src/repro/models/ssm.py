@@ -123,7 +123,30 @@ def ssm_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
 
     With ``cache`` (decode): S must be 1; the conv buffer and SSD state are
     updated in O(1).  Returns ``(y, new_cache)``.
+
+    Paged serving hands the cache as *slot-pool rows*: conv/state leaves
+    are ``(n_slots+1, ...)`` and ``cache["slots"] (B,)`` maps batch lanes
+    to rows (slot 0 reserved null, -1 = padded lane).  The batch's rows
+    are gathered, the ordinary recurrence runs on the local view, and
+    the updated state scatters back (padded-lane writes dropped) -- slot
+    addressing changes memory management, not math.
     """
+    if cache is not None and "slots" in cache:
+        slots = cache["slots"]                       # (B,) int32
+        rows = cache["state"].shape[0]
+        safe = jnp.clip(slots, 0, rows - 1)
+        local = {"conv": cache["conv"][safe], "state": cache["state"][safe]}
+        y, new_local = ssm_apply(params, x, cfg, cache=local, quant=quant)
+        idx = jnp.where(slots >= 0, slots, rows)     # OOB -> dropped
+        new_cache = dict(
+            cache,
+            conv=cache["conv"].at[idx].set(
+                new_local["conv"].astype(cache["conv"].dtype),
+                mode="drop"),
+            state=cache["state"].at[idx].set(
+                new_local["state"].astype(cache["state"].dtype),
+                mode="drop"))
+        return y, new_cache
     bsz, s, _ = x.shape
     di = cfg.ssm_d_inner
     h, p, n, g = cfg.ssm_n_heads, cfg.ssm_head_dim, cfg.ssm_d_state, cfg.ssm_n_groups

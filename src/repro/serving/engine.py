@@ -17,7 +17,12 @@ them with continuous batching in one of two memory regimes:
   and the pool's *prefix cache* shares blocks between requests with a
   common prompt prefix: admission acquires the cached blocks and
   prefills only the **suffix**, directly through the block table
-  (``_paged_prefill``).
+  (``_paged_prefill``).  Sliding-window archs may run ``window <
+  max_len``: blocks whose tokens all fall out of the window are
+  reclaimed each step, so tables are rolling windows and steady-state
+  decode memory is O(window) per request.  SSM/hybrid state and
+  enc-dec cross caches ride a fixed-size *state slot pool* (one slot
+  per request), so every config family serves from this one engine.
 
 Prefill always runs per-request at B=1, with the prompt (paged: the
 uncached suffix) *bucketed to the next power of two* (padded tokens
@@ -220,27 +225,38 @@ class Engine:
         self.steps = 0
         self._seed_counter = 0      # default per-request sampling seeds
         if paged:
-            from repro.serving.paged_cache import PagedKVPool
+            from repro.serving.paged_cache import (PagedKVPool,
+                                                   needs_state_slots)
             from repro.serving.scheduler import Scheduler
             assert max_len % block_size == 0, (max_len, block_size)
-            # SWA rings shorter than max_len wrap during prefill, breaking
-            # the slot-i-holds-token-i block layout; until the pool learns
-            # to drop out-of-window blocks, paged serving requires the
-            # full window to fit (ROADMAP open item)
-            assert cfg.window is None or cfg.window >= max_len, \
-                f"paged serving needs window ({cfg.window}) >= " \
-                f"max_len ({max_len})"
+            # window < max_len is fine: the scheduler reclaims blocks
+            # whose tokens are all out of the attention window, so block
+            # tables are rolling windows and steady-state decode memory
+            # is O(window + state) per request (PR 5 tentpole; the pool
+            # raises a descriptive ValueError for block_size > window)
             if n_blocks is None:
                 # same token capacity as the n_slots contiguous engine,
                 # plus the reserved null block
                 n_blocks = n_slots * (max_len // block_size) + 1
             self.max_batch = max_batch or 2 * n_slots
+            stateful = needs_state_slots(cfg)
+            enc = None
+            if cfg.family == "audio":
+                from repro.launch.specs import enc_len
+                enc = enc_len(cfg, max_len)
             # the engine's VLM frontend is a stub (zero patch embeds), but
             # real per-request patch embeds would make equal token
-            # prefixes carry different KV -- keep the cache off for vlm
+            # prefixes carry different KV -- keep the cache off for vlm.
+            # Stateful archs (ssm/hybrid/audio) keep it off too: SSM
+            # state is an order-dependent running summary (not
+            # block-addressable content) and cross caches are
+            # per-request, so there is no prefix to share
             self.pool = PagedKVPool(
                 cfg, n_blocks, block_size, quant=quant,
-                prefix_cache=prefix_cache and cfg.family != "vlm")
+                prefix_cache=(prefix_cache and cfg.family != "vlm"
+                              and not stateful),
+                n_state_slots=self.max_batch if stateful else 0,
+                enc_len=enc)
             self.scheduler = Scheduler(self.pool, max_len=max_len,
                                        max_batch=self.max_batch)
             self.n_batch_blocks = max_len // block_size   # table width
@@ -265,6 +281,16 @@ class Engine:
                 req = self.queue.pop(0)
                 self._prefill_into(req, slot)
 
+    @property
+    def _bucketable(self) -> bool:
+        """Prompt lengths may pad to pow2 buckets only when every mixer
+        masks by position: SSM/hybrid recurrences consume pad tokens
+        regardless, so those archs prefill at exact length (one rule
+        for the contiguous AND paged prefill paths -- diverging them
+        would break paged-vs-contiguous token identity)."""
+        return all(self.cfg.layer_kind(i) == "attn"
+                   for i in range(self.cfg.n_layers))
+
     # -- shared bucketed B=1 prefill ---------------------------------------
     def _bucketed_prefill(self, prompt: np.ndarray):
         """Prefill one prompt at B=1 with length bucketing.
@@ -279,11 +305,9 @@ class Engine:
         bucketing win applies to the attention engines).
         """
         s = len(prompt)
-        bucketable = all(self.cfg.layer_kind(i) == "attn"
-                         for i in range(self.cfg.n_layers))
         ring = min(self.max_len, self.cfg.window) if self.cfg.window \
             else self.max_len
-        p = prefill_bucket(s, ring) if bucketable else s
+        p = prefill_bucket(s, ring) if self._bucketable else s
         one = M.init_caches(self.cfg, 1, self.max_len, quant=self.quant)
         toks = np.zeros(p, np.int32)
         toks[:s] = np.asarray(prompt, np.int32)
@@ -413,7 +437,7 @@ class Engine:
         suffix = np.asarray(tokens[start:], np.int32)
         s = len(suffix)
         assert s >= 1, "prefix cache must leave >= 1 token to compute"
-        p = prefill_bucket(s, self.max_len)
+        p = prefill_bucket(s, self.max_len) if self._bucketable else s
         toks = np.zeros(p, np.int32)
         toks[:s] = suffix
         pos = np.full(p, -1, np.int32)
@@ -432,8 +456,15 @@ class Engine:
             batch["patch_embeds"] = jnp.zeros(
                 (1, min(self.cfg.n_patches, p), self.cfg.d_model),
                 jnp.dtype(self.cfg.dtype))
+        if self.cfg.family == "audio":
+            from repro.launch.specs import enc_len
+            batch["frames"] = jnp.zeros(
+                (1, enc_len(self.cfg, p), self.cfg.frontend_dim),
+                jnp.dtype(self.cfg.dtype))
+        slots = (np.asarray([seq.slot], np.int32)
+                 if self.pool.slots is not None else None)
         caches = self.pool.step_caches(
-            tables, np.asarray([start], np.int32))
+            tables, np.asarray([start], np.int32), slots=slots)
         logits, caches = prefill_step_bucketed(
             self.params, batch, caches, self.cfg, self.quant)
         self.pool.absorb(caches)
@@ -455,27 +486,36 @@ class Engine:
         sch.admit(self._paged_prefill)
         if not sch.running:
             return False
-        sch.ensure_append_capacity()
+        sch.ensure_append_capacity()    # reclaims out-of-window blocks too
         running = sch.running
         bb = self._decode_bucket(len(running))
         # bucket the table width too: the paged kernel's grid walks one
         # iteration per table entry, so a full-width (max_len/block_size)
         # table would make every decode step pay for the longest possible
-        # sequence -- exactly the over-allocation paging removes
-        nb = min(_next_pow2(max(len(s.blocks) for s in running)),
+        # sequence -- exactly the over-allocation paging removes.  With
+        # sliding-window reclaim the tables are rolling windows, so the
+        # width (and the kernel grid, and the HBM the step moves) stays
+        # O(window/block_size) however long the generation runs
+        nb = min(_next_pow2(max(len(s.blocks) for s in running) or 1),
                  self.n_batch_blocks)
         toks = np.zeros(bb, np.int32)
         pos = np.full(bb, -1, np.int32)       # pad lanes: masked everywhere
         lens = np.zeros(bb, np.int32)
         tables = np.zeros((bb, nb), np.int32)  # 0 = the null block
+        offsets = np.zeros(bb, np.int32)       # reclaimed logical blocks
+        slot_ids = np.full(bb, -1, np.int32)   # pad lanes: no slot
         for i, seq in enumerate(running):
             toks[i], pos[i], lens[i] = seq.last_tok, seq.length, seq.length
             tables[i, :len(seq.blocks)] = seq.blocks
+            offsets[i] = seq.freed_prefix
+            slot_ids[i] = seq.slot
         jpos = jnp.asarray(pos)[:, None]
         if self.cfg.family == "vlm":
             jpos = jnp.broadcast_to(jpos[None], (3, bb, 1))
         batch = {"tokens": jnp.asarray(toks)[:, None], "positions": jpos}
-        caches = self.pool.step_caches(tables, lens)
+        caches = self.pool.step_caches(
+            tables, lens, block_offsets=offsets,
+            slots=slot_ids if self.pool.slots is not None else None)
         logits, caches = serve_step(self.params, batch, caches,
                                     self.cfg, self.quant)
         self.pool.absorb(caches)

@@ -46,6 +46,33 @@ excludes it from every one of the sharer's reads until the sharer has
 replaced it.  Writers still must COW while refcount > 1 so a block
 never mutates under a *live* reader's table.
 
+Sliding-window reclaim.  With ``cfg.window = w < max_len`` a request's
+oldest blocks eventually hold only tokens at positions ``<= q - w`` for
+every future query position ``q`` -- permanently masked, pure dead
+weight in HBM.  The scheduler *releases* such blocks back through the
+refcount path (:meth:`release` with ``window_reclaim=True``): a
+prefix-shared block survives for its other readers, a sole-owned one
+returns to the pool (LRU-parked while indexed, free-listed otherwise).
+Block tables become **rolling windows**: the request's table keeps only
+live blocks and carries a per-request ``block_offset`` (count of
+reclaimed leading logical blocks) so decode writes still land at
+``table[slot // bs - offset]``.  Steady-state decode memory is
+O(window/block_size + 1) blocks per request instead of O(length);
+:meth:`report` counts these reclaims separately from LRU evictions
+(``window_reclaimed``).
+
+State slot pool.  SSM conv+state leaves (mamba/hybrid mixers) and
+enc-dec cross-K/V caches are *fixed-size per request* -- there is
+nothing token-granular to page.  :class:`StateSlotPool` allocates them
+in whole-request **slots**: the pool's state leaves carry
+``n_state_slots + 1`` rows (row 0 reserved null, read by padded batch
+lanes), a request owns one slot id for its lifetime, and
+:meth:`step_caches` injects the batch's slot ids so the mixers
+gather/scatter their rows (:func:`repro.models.ssm.ssm_apply`,
+:func:`repro.models.layers.cross_attention_apply`).  One scheduler owns
+all four cache kinds: paged self-attention KV blocks, SSM state slots,
+enc-dec cross slots, and (contiguous engine) plain slabs.
+
 Invariants the pool maintains (see :meth:`validate`):
 * the null block is never allocated, shared, indexed or freed;
 * freshly allocated (and LRU-evicted) blocks have positions reset to -1
@@ -64,8 +91,10 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
+from functools import lru_cache, partial
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -86,14 +115,28 @@ def _chain_hash(prev: int, tokens: tuple) -> int:
     return hash((prev, tokens))
 
 
+def needs_blocks(cfg: ModelConfig) -> bool:
+    """True when the decoder owns at least one self-attention KV stream
+    (pageable in token blocks).  Pure-SSM archs have none -- their pool
+    is slots only."""
+    return any(cfg.layer_kind(i) == "attn" for i in range(cfg.n_layers))
+
+
+def needs_state_slots(cfg: ModelConfig) -> bool:
+    """True when the arch carries fixed-size per-request state that the
+    paged engine must slot-allocate: SSM conv+state (ssm/hybrid) or
+    enc-dec cross caches (audio)."""
+    return cfg.family in ("ssm", "hybrid", "audio")
+
+
 def supports_paging(cfg: ModelConfig) -> bool:
-    """Paged serving needs every mixer to own a pageable KV stream:
-    attention-only decoders (dense/moe/vlm).  SSM/hybrid state and
-    enc-dec cross caches are fixed-size per request -- nothing to page
-    (ROADMAP open item)."""
-    return (cfg.family != "audio"
-            and all(cfg.layer_kind(i) == "attn"
-                    for i in range(cfg.n_layers)))
+    """Every current family is servable by the paged engine: attention
+    KV goes through the block pool, SSM/hybrid state and enc-dec cross
+    caches through the fixed-size slot pool (closed ROADMAP PR-2 open
+    item).  This is the single support gate -- the pool asserts it at
+    construction, so a future family that is neither block- nor
+    slot-addressable fails here, in one spot."""
+    return needs_blocks(cfg) or needs_state_slots(cfg)
 
 
 @dataclasses.dataclass
@@ -141,31 +184,143 @@ class PrefixHit:
     filled: int            # valid tokens in that partial block (else 0)
 
 
+class StateSlotPool:
+    """Fixed-size per-request state slots (SSM conv+state, enc-dec cross).
+
+    The allocation unit is one request's entire state -- every mamba
+    layer's conv/state row plus every cross cache's enc-length row --
+    addressed by a single slot id valid in all layers (the slot analogue
+    of the block pool's one-logical-id-addresses-all-layers rule).  Row
+    0 is the reserved **null slot**: never allocated; padded batch lanes
+    gather it (zeros / pos -1, contributing nothing) and their writes
+    are routed out of bounds and dropped.
+    """
+
+    def __init__(self, n_slots: int):
+        assert n_slots >= 1, "need at least one usable slot"
+        self.n_slots = n_slots
+        # LIFO free list; slot 0 reserved as the null slot
+        self._free = list(range(n_slots, 0, -1))
+        self._used: set = set()
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_slots(self) -> int:
+        return len(self._used)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError(
+                f"slot pool exhausted: all {self.n_slots} state slots "
+                f"are owned by running requests")
+        slot = self._free.pop()
+        self._used.add(slot)
+        return slot
+
+    def free(self, slot: int) -> None:
+        slot = int(slot)
+        if slot == 0:
+            raise ValueError("free(): slot 0 is the reserved null slot")
+        if slot not in self._used:
+            raise ValueError(f"free(): double free of slot {slot}")
+        self._used.remove(slot)
+        self._free.append(slot)
+
+    def validate(self) -> None:
+        free = set(self._free)
+        assert 0 not in free and 0 not in self._used, "null slot escaped"
+        assert not (free & self._used), free & self._used
+        assert len(free) + len(self._used) == self.n_slots, \
+            (len(free), len(self._used), self.n_slots)
+
+
+@lru_cache(maxsize=None)
+def _zero_slot_rows(stacked: bool):
+    """Jitted one-dispatch reset of a single slot's row across every
+    leaf of one state cache dict (cross ``pos`` resets to -1 so empty
+    rows stay masked).  ``alloc_slot`` runs per admission, so this
+    avoids one whole-leaf copy dispatch per key; on TPU the input
+    buffers are donated and the reset is in place (donation is a no-op
+    on CPU and would warn, hence the backend check)."""
+    donate = (0,) if jax.default_backend() == "tpu" else ()
+
+    @partial(jax.jit, donate_argnums=donate)
+    def reset(c: dict, idx):
+        bdim = 1 if stacked else 0
+        out = {}
+        for key, leaf in c.items():
+            fill = -1 if key == "pos" else 0
+            z = jnp.full((1,) + leaf.shape[bdim + 1:], fill, leaf.dtype)
+            if bdim:
+                z = jnp.broadcast_to(z[None], leaf.shape[:1] + z.shape)
+                out[key] = leaf.at[:, idx].set(z)
+            else:
+                out[key] = leaf.at[idx].set(z)
+        return out
+
+    return reset
+
+
 class PagedKVPool:
-    """Refcounted copy-on-write pool of packed bipolar KV planes.
+    """Refcounted copy-on-write pool of packed bipolar KV planes, plus a
+    fixed-size slot pool for per-request SSM / enc-dec cross state.
 
     ``n_blocks`` counts physical blocks *including* the reserved null
     block 0; capacity available to requests is ``n_usable = n_blocks-1``
     blocks of ``block_size`` tokens each.  ``prefix_cache=False``
     restores PR-2 behavior: no index, release destroys immediately.
+    ``n_state_slots`` (required for ssm/hybrid/audio archs) sizes the
+    :class:`StateSlotPool`; ``enc_len`` caps the enc-dec cross rows and
+    is required for audio archs (the Engine passes the stub frontend
+    length for ``max_len`` -- the pool cannot derive it because its own
+    ``max_len`` slot carries ``block_size``).
     """
 
     def __init__(self, cfg: ModelConfig, n_blocks: int, block_size: int,
                  quant: Optional[QuantConfig] = None, *,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, n_state_slots: int = 0,
+                 enc_len: Optional[int] = None):
         assert supports_paging(cfg), \
-            f"paged KV pool needs an attention-only decoder, got {cfg.family}"
+            f"no pageable KV stream or slottable state for {cfg.family!r}"
         kv_bits = effective_kv_bits(cfg, quant)
-        assert kv_bits, "the paged pool stores packed bipolar planes: " \
-            "set kv_bits (QuantConfig.kv_bits or ModelConfig.kv_bits)"
+        self.needs_blocks = needs_blocks(cfg)
+        self.needs_slots = needs_state_slots(cfg)
+        if self.needs_blocks:
+            assert kv_bits, "the paged pool stores packed bipolar " \
+                "planes: set kv_bits (QuantConfig.kv_bits or " \
+                "ModelConfig.kv_bits)"
         assert n_blocks >= 2, "need at least the null block + one usable"
-        if cfg.window:
-            assert block_size <= cfg.window, (block_size, cfg.window)
+        if cfg.window is not None and block_size > cfg.window:
+            raise ValueError(
+                f"Engine block_size={block_size} exceeds ModelConfig."
+                f"window={cfg.window}: a block spanning more than the "
+                f"attention window could hold live and dead tokens at "
+                f"once for arbitrarily long; choose block_size <= "
+                f"window (or raise ModelConfig.window)")
+        if self.needs_slots and n_state_slots < 1:
+            raise ValueError(
+                f"{cfg.family} archs carry fixed-size per-request state "
+                f"(SSM conv+state / enc-dec cross caches): pass "
+                f"n_state_slots >= 1 so the slot pool can hold it "
+                f"(Engine sizes it to max_batch)")
+        if cfg.family == "audio" and enc_len is None:
+            raise ValueError(
+                "audio archs need enc_len (the cross-row capacity): the "
+                "pool passes block_size where init_caches expects "
+                "max_len, so it cannot derive the frontend length "
+                "itself -- Engine passes enc_len(cfg, max_len)")
         self.cfg, self.quant = cfg, quant
         self.kv_bits = kv_bits
         self.n_blocks, self.block_size = n_blocks, block_size
         self.prefix_cache = prefix_cache
-        self.caches = M.init_caches(cfg, n_blocks, block_size, quant=quant)
+        self.slots = (StateSlotPool(n_state_slots)
+                      if self.needs_slots else None)
+        self.caches = M.init_caches(
+            cfg, n_blocks, block_size, enc_len=enc_len, quant=quant,
+            state_batch=(n_state_slots + 1) if self.needs_slots else None)
         # LIFO free list, block 0 reserved as the null block
         self._free = list(range(n_blocks - 1, 0, -1))
         self._ref: dict = {}            # block id -> refcount (>= 0)
@@ -184,6 +339,7 @@ class PagedKVPool:
         self.n_lookup_tokens = 0
         self.n_cow = 0
         self.n_evictions = 0
+        self.n_window_reclaimed = 0     # out-of-window blocks returned
         # block-chunk hashes computed by register_chain (the ChainMemo
         # resume point keeps this O(new blocks) per call, not O(chain))
         self.n_chain_hash_ops = 0
@@ -245,11 +401,16 @@ class PagedKVPool:
             prefix_lookup_tokens=self.n_lookup_tokens,
             cow_copies=self.n_cow,
             evictions=self.n_evictions,
+            window_reclaimed=self.n_window_reclaimed,
             chain_hash_ops=self.n_chain_hash_ops,
             pool_bytes=int(pool_bytes), payload_bytes=int(payload),
             bytes_per_block=int(pool_bytes / max(self.n_blocks, 1)),
             occupancy=self.used_blocks / max(self.n_usable, 1),
         )
+        if self.slots is not None:
+            rep.update(state_slots=self.slots.n_slots,
+                       free_state_slots=self.slots.free_slots,
+                       used_state_slots=self.slots.used_slots)
         if tokens_resident is not None:
             rep["tokens_resident"] = int(tokens_resident)
             rep["fragmentation"] = (
@@ -320,11 +481,23 @@ class PagedKVPool:
                 self._lru.pop(bid)
             self._ref[bid] += 1
 
-    def release(self, ids) -> None:
+    def release(self, ids, *, window_reclaim: bool = False) -> None:
         """Drop one reference per block.  At refcount 0 an indexed block
         parks in the LRU cache (evicted only when :meth:`alloc` runs
         dry); an unindexed one is destroyed.  With ``prefix_cache=False``
-        refcount 0 always destroys (PR-2 reclamation)."""
+        refcount 0 always destroys (PR-2 reclamation).
+
+        ``window_reclaim``: this release retires an out-of-window block
+        (sliding-window attention: every token the block holds is
+        permanently masked for its owner).  Prefix-shared blocks survive
+        for their other readers -- ``report()``'s ``window_reclaimed``
+        counts only blocks that reached refcount 0 and so became
+        *reallocatable*: free-listed if unindexed, LRU-parked if the
+        prefix index still maps them (a parked block serves future
+        same-prefix hits until allocation pressure takes it, at which
+        point it ALSO counts in ``evictions`` -- the two counters tally
+        different events, retire-by-window vs reuse-under-pressure, not
+        disjoint block sets)."""
         ids = list(ids)
         if ids:
             self.version += 1
@@ -337,6 +510,8 @@ class PagedKVPool:
             self._ref[bid] -= 1
             if self._ref[bid] > 0:
                 continue
+            if window_reclaim:
+                self.n_window_reclaimed += 1
             if self.prefix_cache and bid in self._meta:
                 self._lru[bid] = None          # MRU end
             else:
@@ -526,6 +701,8 @@ class PagedKVPool:
             meta = self._meta.get(bid)
             assert meta is not None and 0 < meta.filled < self.block_size
             assert meta.prefix_hash == h
+        if self.slots is not None:
+            self.slots.validate()
         if check_contents:
             for c, stacked in self._attn_caches():
                 pos = np.asarray(c["pos"])
@@ -538,14 +715,56 @@ class PagedKVPool:
                     assert (got == want).all(), (bid, got, want)
                 break    # one layer suffices: ids address all layers alike
 
+    # -- state slots ---------------------------------------------------------
+    def alloc_slot(self) -> int:
+        """Take one state slot with its rows reset (a reused slot must
+        not leak a freed request's SSM state or cross-K/V through the
+        recurrence / position mask)."""
+        assert self.slots is not None, "pool has no state slot pool"
+        slot = self.slots.alloc()
+        self._reset_slot(slot)
+        return slot
+
+    def free_slot(self, slot: int) -> None:
+        assert self.slots is not None, "pool has no state slot pool"
+        self.slots.free(slot)
+
+    def _reset_slot(self, slot: int) -> None:
+        idx = jnp.asarray([slot], jnp.int32)
+        for c, stacked in self._state_caches():
+            c.update(_zero_slot_rows(stacked)({k: c[k] for k in c}, idx))
+
     # -- tree plumbing -------------------------------------------------------
+    @staticmethod
+    def _is_attn(c) -> bool:
+        """Self-attention KV cache dict (block-addressed), vs an SSM
+        state dict ({conv, state}, slot-addressed)."""
+        return "conv" not in c
+
     def _attn_caches(self, caches=None):
-        """Yield ``(cache_dict, stacked)`` for every attention layer;
-        stacked leaves carry a leading ``n_units`` scan dim."""
+        """Yield ``(cache_dict, stacked)`` for every *self-attention*
+        layer (block-addressed KV planes); stacked leaves carry a
+        leading ``n_units`` scan dim.  SSM state dicts and the enc-dec
+        cross caches are slot-addressed and excluded."""
         caches = self.caches if caches is None else caches
         for c in caches.get("prelude", []):
-            yield c, False
+            if self._is_attn(c):
+                yield c, False
         for c in caches["blocks"]:
+            if self._is_attn(c):
+                yield c, True
+
+    def _state_caches(self, caches=None):
+        """Yield ``(cache_dict, stacked)`` for every slot-addressed
+        state cache: SSM conv+state dicts and enc-dec cross caches."""
+        caches = self.caches if caches is None else caches
+        for c in caches.get("prelude", []):
+            if not self._is_attn(c):
+                yield c, False
+        for c in caches["blocks"]:
+            if not self._is_attn(c):
+                yield c, True
+        for c in caches.get("cross", []):
             yield c, True
 
     def _reset_pos(self, ids) -> None:
@@ -590,39 +809,65 @@ class PagedKVPool:
             for key in _KV_KEYS:
                 pc[key] = copy(pc[key], sc[key], stacked)
 
-    def step_caches(self, block_tables: np.ndarray, lengths: np.ndarray):
-        """Pool tree for one decode/prefill step: each attention cache
-        dict gains this batch's ``block_tables (B, NB)`` and ``length
-        (B,)`` -- the number of tokens already resident, i.e. the write
-        offset of the step's first new token (stacked layers see them
-        broadcast over the leading ``n_units`` dim)."""
+    _STEP_KEYS = ("block_tables", "length", "block_offset", "slots")
+
+    def step_caches(self, block_tables: np.ndarray, lengths: np.ndarray,
+                    *, block_offsets: Optional[np.ndarray] = None,
+                    slots: Optional[np.ndarray] = None):
+        """Pool tree for one decode/prefill step.
+
+        Each *attention* cache dict gains this batch's ``block_tables
+        (B, NB)``, ``length (B,)`` -- the number of tokens already
+        resident, i.e. the write offset of the step's first new token
+        -- and ``block_offset (B,)``, the count of leading logical
+        blocks reclaimed out-of-window (the table is a rolling window:
+        entry ``j`` maps logical block ``j + offset``).  Each *state*
+        cache dict (SSM conv+state, enc-dec cross) gains ``slots (B,)``
+        -- the batch rows' slot ids, -1 for padded lanes.  Stacked
+        layers see everything broadcast over the leading ``n_units``
+        dim."""
         bt = jnp.asarray(block_tables, jnp.int32)
         ln = jnp.asarray(lengths, jnp.int32)
+        off = (jnp.zeros_like(ln) if block_offsets is None
+               else jnp.asarray(block_offsets, jnp.int32))
+        sl = None if slots is None else jnp.asarray(slots, jnp.int32)
+
+        def bc(a, u):
+            return jnp.broadcast_to(a, (u,) + a.shape)
 
         def aug(c, stacked):
+            if not self._is_attn(c):
+                assert sl is not None, \
+                    "state caches need this batch's slot ids"
+                u = c["conv"].shape[0] if stacked else None
+                return dict(c, slots=bc(sl, u) if stacked else sl)
             if stacked:
                 u = c["k"].shape[0]
-                return dict(c,
-                            block_tables=jnp.broadcast_to(
-                                bt, (u,) + bt.shape),
-                            length=jnp.broadcast_to(ln, (u,) + ln.shape))
-            return dict(c, block_tables=bt, length=ln)
+                return dict(c, block_tables=bc(bt, u),
+                            length=bc(ln, u), block_offset=bc(off, u))
+            return dict(c, block_tables=bt, length=ln, block_offset=off)
 
         out = {}
         if "prelude" in self.caches:
             out["prelude"] = [aug(c, False)
                               for c in self.caches["prelude"]]
         out["blocks"] = [aug(c, True) for c in self.caches["blocks"]]
+        if "cross" in self.caches:
+            assert sl is not None, \
+                "cross caches need this batch's slot ids"
+            out["cross"] = [
+                dict(c, slots=bc(sl, c["k"].shape[0]))
+                for c in self.caches["cross"]]
         return out
 
     def absorb(self, new_caches) -> None:
         """Store updated pool leaves back, stripping the per-step keys."""
         def strip(c):
             return {k: v for k, v in c.items()
-                    if k not in ("block_tables", "length")}
+                    if k not in self._STEP_KEYS}
 
         out = {}
-        if "prelude" in new_caches:
-            out["prelude"] = [strip(c) for c in new_caches["prelude"]]
-        out["blocks"] = [strip(c) for c in new_caches["blocks"]]
+        for section in ("prelude", "blocks", "cross"):
+            if section in new_caches:
+                out[section] = [strip(c) for c in new_caches[section]]
         self.caches = out

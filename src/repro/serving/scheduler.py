@@ -20,14 +20,24 @@ partial tail.  A decode append into a block another table still maps
 mutate under a reader.
 
 Per-request state lives in :class:`SequenceState` objects (not parallel
-numpy arrays): cached length, next input token, owned blocks, sampling
-params, and the per-request RNG stream (sampling is keyed by
-``(request seed, output index)``, so a preempted-then-resumed request
-reproduces the exact tokens an uncontended run produces even at
+numpy arrays): cached length, next input token, owned blocks, the state
+slot, sampling params, and the per-request RNG stream (sampling is
+keyed by ``(request seed, output index)``, so a preempted-then-resumed
+request reproduces the exact tokens an uncontended run produces even at
 temperature > 0).  Liveness guarantee: a request whose lifetime block
 need exceeds the pool is rejected at submit time, so the oldest running
 request can always grow -- preemption of everything younger frees or
 re-caches enough blocks -- and the preemption loop terminates.
+
+Sliding-window reclaim: before each step's allocations
+(:meth:`Scheduler.ensure_append_capacity`) every running request's
+leading blocks whose tokens are all out of the attention window are
+released back through the refcount path -- block tables become rolling
+windows (``SequenceState.freed_prefix``) and steady-state memory per
+request is O(window), not O(length).  State slots: stateful archs
+(ssm/hybrid/audio) additionally gate admission on a free slot of the
+pool's :class:`~repro.serving.paged_cache.StateSlotPool`; pure-SSM
+configs skip block accounting entirely (``pool.needs_blocks``).
 """
 
 from __future__ import annotations
@@ -50,6 +60,12 @@ class SequenceState:                   # removed from lists by object
     blocks: list = dataclasses.field(default_factory=list)
     cached_len: int = 0             # prompt tokens served from the cache
     admitted_at: int = -1           # admission counter (preemption order)
+    # sliding-window reclaim: leading logical blocks already released as
+    # fully out-of-window; ``blocks`` holds only the live suffix and the
+    # block table carries this as its per-request ``block_offset``
+    freed_prefix: int = 0
+    # state slot (SSM conv+state / enc-dec cross rows); -1 = none
+    slot: int = -1
     # resume point for pool.register_chain: full blocks already indexed
     # by this owner are skipped, so chain bookkeeping on every
     # finish/preempt costs O(new blocks), not O(chain length)
@@ -127,11 +143,18 @@ class Scheduler:
             self.reject(req, f"prompt ({len(req.prompt)} tokens) >= "
                              f"max_len-1 ({self.max_len - 1})")
             return
-        need = self.pool.blocks_for(min(worst, self.max_len))
-        if need > self.pool.n_usable:
-            self.reject(req, f"needs {need} blocks at its longest, pool "
-                             f"has {self.pool.n_usable}")
-            return
+        if self.pool.needs_blocks:
+            # the gate stays at the full un-reclaimed worst case even
+            # for windowed configs: prefill (and recompute-preemption's
+            # re-prefill) writes the whole chain in one pass, so the
+            # O(window) steady state does not bound the transient and
+            # the liveness argument needs the full count (ROADMAP PR-5
+            # open item: chunked prefill would lift this)
+            need = self.pool.blocks_for(min(worst, self.max_len))
+            if need > self.pool.n_usable:
+                self.reject(req, f"needs {need} blocks at its longest, "
+                                 f"pool has {self.pool.n_usable}")
+                return
         self.waiting.append(req)
 
     def reject(self, req, reason: str) -> None:
@@ -152,6 +175,9 @@ class Scheduler:
         same-prefix request hits it."""
         while self.waiting and len(self.running) < self.max_batch:
             req = self.waiting[0]
+            if self.pool.slots is not None \
+                    and self.pool.slots.free_slots == 0:
+                break      # FCFS: wait for a finishing request's slot
             if self._blocked_head is not None \
                     and self._blocked_head[0] is req \
                     and self._blocked_head[1] == self.pool.version:
@@ -162,12 +188,17 @@ class Scheduler:
             # a shared partial tail must be copied before the suffix
             # writes into it (COW); sole-reference tails extend in place
             cow = hit.partial and self.pool.refcount(hit.ids[-1]) > 1
-            need = self.pool.blocks_for(len(tokens)) - len(hit.ids) \
-                + (1 if cow else 0)
-            # block-aligned chains open a fresh block on the first decode
-            # append: admitting without that headroom would get the
-            # request preempted (its prefill discarded) on the same step
-            headroom = 1 if len(tokens) % self.pool.block_size == 0 else 0
+            if self.pool.needs_blocks:
+                need = self.pool.blocks_for(len(tokens)) - len(hit.ids) \
+                    + (1 if cow else 0)
+                # block-aligned chains open a fresh block on the first
+                # decode append: admitting without that headroom would
+                # get the request preempted (its prefill discarded) on
+                # the same step
+                headroom = 1 if len(tokens) % self.pool.block_size == 0 \
+                    else 0
+            else:
+                need = headroom = 0     # pure-SSM: state slots only
             if need + headroom > self.pool.free_blocks:
                 self.pool.release(hit.ids)     # back to the cache
                 # memoize AFTER the release (it bumps pool.version)
@@ -180,6 +211,8 @@ class Scheduler:
                 seq.blocks[-1] = self.pool.cow(seq.blocks[-1])
             if need - (1 if cow else 0):
                 seq.blocks.extend(self.pool.alloc(need - (1 if cow else 0)))
+            if self.pool.slots is not None:
+                seq.slot = self.pool.alloc_slot()
             seq.cached_len = hit.cached_len
             self.pool.record_hit(hit, len(tokens))
             seq.admitted_at = self._admit_counter
@@ -187,13 +220,51 @@ class Scheduler:
             prefill_fn(seq, tokens)
             self.pool.register_chain(tokens, seq.blocks,
                                      memo=seq.chain_memo)
+            # a long prompt's leading blocks may already be fully out of
+            # the attention window: return them before decode starts
+            self._reclaim_seq(seq)
             self.running.append(seq)
+
+    # -- sliding-window reclaim ----------------------------------------------
+    def _reclaim_seq(self, seq: SequenceState) -> None:
+        """Release every leading block of ``seq`` whose tokens are all
+        out of the attention window for all future queries.
+
+        The pending query position is ``seq.length``, so future queries
+        attend positions ``> q - window >= length - window``; logical
+        block ``j`` (tokens ``[j*bs, (j+1)*bs)``) is dead once
+        ``(j+1)*bs - 1 <= length - window``.  Released blocks go through
+        the refcount path (prefix-shared copies survive for their other
+        readers) and the block table becomes a rolling window: ``blocks``
+        keeps the live suffix, ``freed_prefix`` the offset."""
+        w = self.pool.cfg.window
+        if w is None or not self.pool.needs_blocks:
+            return
+        n_dead = max(0, (seq.length - w + 1) // self.pool.block_size)
+        drop = n_dead - seq.freed_prefix
+        if drop <= 0:
+            return
+        # the write-target block (logical length // bs) is never dead
+        # for window >= 1, so the live suffix keeps at least the tail
+        assert drop <= len(seq.blocks), (drop, len(seq.blocks))
+        dead, seq.blocks = seq.blocks[:drop], seq.blocks[drop:]
+        seq.freed_prefix = n_dead
+        self.pool.release(dead, window_reclaim=True)
+
+    def reclaim_out_of_window(self) -> None:
+        """Roll every running request's block table past its dead
+        prefix (sliding-window attention), returning out-of-window
+        blocks to the pool before this step's allocations."""
+        for seq in self.running:
+            self._reclaim_seq(seq)
 
     # -- decode-step capacity ------------------------------------------------
     def _append_need(self, seq: SequenceState) -> int:
         """Blocks this step's KV append costs: 1 fresh block when the
         chain is block-aligned, 1 COW copy when the write would land in
         a block another table still maps, else 0."""
+        if not self.pool.needs_blocks:
+            return 0
         if seq.length % self.pool.block_size == 0:
             return 1
         if self.pool.refcount(seq.blocks[-1]) > 1:
@@ -203,10 +274,15 @@ class Scheduler:
     def ensure_append_capacity(self) -> None:
         """Allocate this step's new blocks (fresh + copy-on-write),
         evicting the youngest running request(s) while the pool is
-        short.  Terminates: the oldest request alone always fits
-        (submit-time rejection bounds any single request's lifetime
-        need to the pool size, and preempting every younger request
-        returns all other blocks to refcount 0)."""
+        short.  Out-of-window blocks are reclaimed first -- freeing a
+        dead prefix can make preemption unnecessary.  Terminates: the
+        oldest request alone always fits (submit-time rejection bounds
+        any single request's lifetime need to the pool size, and
+        preempting every younger request returns all other blocks to
+        refcount 0)."""
+        self.reclaim_out_of_window()
+        if not self.pool.needs_blocks:
+            return
         while True:
             need = sum(self._append_need(s) for s in self.running)
             if need <= self.pool.free_blocks:
@@ -228,11 +304,19 @@ class Scheduler:
     def _release_seq(self, seq: SequenceState) -> None:
         """Register the chain (newly filled blocks become hits for
         same-prefix requests -- including this one, on warm restart)
-        and drop this table's references."""
-        self.pool.register_chain(seq.token_chain(), seq.blocks,
-                                 memo=seq.chain_memo)
+        and drop this table's references.  A rolled table
+        (``freed_prefix > 0``) skips registration: its blocks no longer
+        start at chain position 0, and a prefix walker could never
+        reach them without the reclaimed head anyway.  The state slot
+        (if any) returns to the slot pool."""
+        if seq.freed_prefix == 0:
+            self.pool.register_chain(seq.token_chain(), seq.blocks,
+                                     memo=seq.chain_memo)
         self.pool.release(seq.blocks)
         seq.blocks = []
+        if seq.slot >= 0:
+            self.pool.free_slot(seq.slot)
+            seq.slot = -1
 
     def preempt(self, seq: SequenceState) -> None:
         """Evict: release the blocks (they stay cached until allocation

@@ -179,6 +179,108 @@ def test_paged_sq_causality_within_suffix():
                                    rtol=2e-6, atol=2e-6)
 
 
+# ---------------------------------------------------------------------------
+# Sliding-window boundaries (ISSUE 5): the kernel's window mask + the
+# grid's dead-block skip across all impls
+# ---------------------------------------------------------------------------
+
+# bs=8 throughout: 8 = window == block_size, 6/13 = window % block_size
+# != 0 (smaller and larger than a block), 4 = window < block_size
+WINDOWS = [4, 6, 8, 13]
+
+
+@pytest.mark.parametrize("window", WINDOWS)
+@pytest.mark.parametrize("sq", [1, 5])
+def test_paged_windowed_parity_all_impls(window, sq):
+    """Windowed paged attention (Sq=1 decode and Sq>1 suffix prefill)
+    agrees across reference | interpret (the pallas path runs the same
+    kernel body on TPU) at every window/block alignment."""
+    paged, _ = _paged_inputs(8, sq=sq, lens=(19, 9) if sq > 1 else (19, 7))
+    d = paged[0].shape[-1]
+    y_ref = np.asarray(ops.paged_kv_cache_attention(
+        *paged, d=d, window=window, impl="reference"))
+    y_int = np.asarray(ops.paged_kv_cache_attention(
+        *paged, d=d, window=window, q_block=8 if sq > 1 else None,
+        impl="interpret"))
+    np.testing.assert_allclose(y_int, y_ref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("impl", ["reference", "interpret"])
+@pytest.mark.parametrize("window", [4, 8])
+def test_paged_window_edge_is_exclusive(impl, window):
+    """q at position p attends exactly kv positions in (p - w, p]: the
+    windowed result over the full pool equals the UNwindowed result
+    over a pool whose out-of-window slots are invalidated by hand --
+    if the kernel's edge were off by one either way, the two would
+    differ at the boundary token."""
+    paged, _ = _paged_inputs(8, lens=(19,), B=1)
+    q, kp, ks, vp, vs, pos, tables, q_pos = paged
+    d = q.shape[-1]
+    y_w = np.asarray(ops.paged_kv_cache_attention(
+        q, kp, ks, vp, vs, pos, tables, q_pos, d=d, window=window,
+        impl=impl))
+    edge = int(q_pos[0, 0]) - window          # last EXCLUDED position
+    pos_masked = jnp.where(pos <= edge, -1, pos)
+    y_m = np.asarray(ops.paged_kv_cache_attention(
+        q, kp, ks, vp, vs, pos_masked, tables, q_pos, d=d, window=None,
+        impl=impl))
+    np.testing.assert_allclose(y_w, y_m, rtol=2e-6, atol=2e-6)
+    # the boundary matters: including position `edge` changes the result
+    pos_off = jnp.where(pos <= edge - 1, -1, pos)
+    y_off = np.asarray(ops.paged_kv_cache_attention(
+        q, kp, ks, vp, vs, pos_off, tables, q_pos, d=d, window=None,
+        impl=impl))
+    assert np.abs(y_off - y_w).max() > 1e-6, \
+        "edge token contributed nothing -- boundary test is vacuous"
+
+
+@pytest.mark.parametrize("sq", [1, 4])
+def test_paged_q_pos_exactly_at_window_edges(sq):
+    """Query positions sitting exactly at window-multiple boundaries
+    (q_pos = w, and block-crossing suffixes): reference/interpret agree
+    and rows whose window precisely covers one block see it."""
+    w = 8
+    paged, _ = _paged_inputs(8, sq=sq, lens=(w + sq,), B=1)
+    q, kp, ks, vp, vs, pos, tables, q_pos = paged
+    d = q.shape[-1]
+    assert int(np.asarray(q_pos).min()) == w, np.asarray(q_pos)
+    y_ref = np.asarray(ops.paged_kv_cache_attention(
+        q, kp, ks, vp, vs, pos, tables, q_pos, d=d, window=w,
+        impl="reference"))
+    y_int = np.asarray(ops.paged_kv_cache_attention(
+        q, kp, ks, vp, vs, pos, tables, q_pos, d=d, window=w,
+        q_block=8 if sq > 1 else None, impl="interpret"))
+    np.testing.assert_allclose(y_int, y_ref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("impl", ["reference", "interpret"])
+def test_paged_rolling_table_drops_dead_blocks_identically(impl):
+    """The reclaim contract at the kernel level: once a block is fully
+    out of every query's window, removing it from the table (the
+    scheduler's rolling-window compaction -- pad entries point at the
+    null block) must not change the output.  This is what makes
+    out-of-window reclaim a pure memory-management change."""
+    w, bs = 6, 8
+    paged, _ = _paged_inputs(8, lens=(19,), B=1)
+    q, kp, ks, vp, vs, pos, tables, q_pos = paged
+    d = q.shape[-1]
+    L = int(q_pos[0, 0]) + 1                     # 19 resident tokens
+    # block j is dead for the (single) query at L-1 iff its last token
+    # (j+1)*bs - 1 <= (L-1) - w; here block 0 (pos 0..7): 7 <= 12
+    n_dead = max(0, (L - w) // bs)
+    assert n_dead >= 1
+    y_full = np.asarray(ops.paged_kv_cache_attention(
+        q, kp, ks, vp, vs, pos, tables, q_pos, d=d, window=w, impl=impl))
+    rolled = np.asarray(tables).copy()
+    live = rolled[0, n_dead:].copy()
+    rolled[0, :len(live)] = live                 # compact left
+    rolled[0, len(live):] = 0                    # pad -> null block
+    y_roll = np.asarray(ops.paged_kv_cache_attention(
+        q, kp, ks, vp, vs, pos, jnp.asarray(rolled), q_pos, d=d,
+        window=w, impl=impl))
+    np.testing.assert_allclose(y_roll, y_full, rtol=2e-6, atol=2e-6)
+
+
 def test_paged_null_block_and_inactive_lanes_return_zero():
     """Padded table entries point at the null block (pos -1) and padded
     batch lanes carry q_pos -1: both must contribute exactly 0 under

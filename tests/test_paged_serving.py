@@ -26,6 +26,11 @@ import jax
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:    # property tests skip (not error) without hypothesis
+    from _hypothesis_fallback import given, settings, st
+
 from repro.configs import get_config
 from repro.models import model as M
 from repro.serving import engine as E
@@ -82,12 +87,36 @@ def test_pool_alloc_resets_positions():
         assert (np.asarray(c["pos"])[..., a, :] == -1).all()
 
 
-def test_pool_requires_kv_bits_and_attention():
+def test_pool_requires_kv_bits_and_slot_sizing():
     cfg, _ = _setup(n_layers=2)
     with pytest.raises(AssertionError):
         PagedKVPool(cfg, n_blocks=4, block_size=4, quant=None)  # bf16 cache
+    # every family pages now: attention KV in blocks, state in slots --
+    # but stateful archs must size the slot pool
     ssm_cfg = get_config("mamba2-130m").reduced()
-    assert not supports_paging(ssm_cfg)
+    assert supports_paging(ssm_cfg)
+    with pytest.raises(ValueError, match="n_state_slots"):
+        PagedKVPool(ssm_cfg, n_blocks=4, block_size=4)
+    pool = PagedKVPool(ssm_cfg, n_blocks=4, block_size=4, n_state_slots=2)
+    assert not pool.needs_blocks and pool.slots is not None
+    a = pool.alloc_slot()
+    b = pool.alloc_slot()
+    assert 0 not in (a, b), "null slot must never be allocated"
+    with pytest.raises(RuntimeError, match="slot pool exhausted"):
+        pool.alloc_slot()
+    pool.free_slot(a)
+    with pytest.raises(ValueError, match="double free"):
+        pool.free_slot(a)
+    pool.validate()
+
+
+def test_pool_block_size_beyond_window_raises_descriptive():
+    """The old opaque `assert window >= max_len` is gone (out-of-window
+    reclaim handles window < max_len); the one genuinely invalid combo
+    left raises a ValueError naming the knobs."""
+    cfg, _ = _setup("mixtral-8x7b", n_layers=2, window=8)
+    with pytest.raises(ValueError, match="block_size.*window"):
+        PagedKVPool(cfg, n_blocks=4, block_size=16, quant=_kv8(cfg))
 
 
 def test_admission_headroom_for_block_aligned_prompts():
@@ -452,3 +481,283 @@ def test_paged_engine_moe_and_window_arch():
     out_p, _ = _run_engine(params, cfg, prompts, quant=kv8, max_new=4,
                            paged=True, block_size=8)
     assert out_p == out_c
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window reclaim (window < max_len) -- ISSUE 5 tentpole
+# ---------------------------------------------------------------------------
+
+def test_windowed_paged_token_identical_and_reclaims():
+    """`mixtral-8x7b` smoke with window < max_len: the paged engine must
+    (a) greedy-decode token-identically to the contiguous ring engine at
+    equal kv_bits, (b) return out-of-window blocks to the pool *during*
+    the generation (report's window_reclaimed), and (c) hold a
+    steady-state table bounded by ~window/block_size + 1 blocks."""
+    cfg, params = _setup("mixtral-8x7b", n_layers=2, window=8)
+    kv8 = _kv8(cfg)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, (5 + i,), dtype=np.int32)
+               for i in range(2)]
+    out_c, _ = _run_engine(params, cfg, prompts, quant=kv8, max_new=18)
+    eng = E.Engine(params, cfg, n_slots=2, max_len=32, quant=kv8,
+                   paged=True, block_size=4)
+    reqs = [E.Request(prompt=p.copy(), max_new_tokens=18) for p in prompts]
+    for r in reqs:
+        eng.submit(r)
+    max_live = 0
+    while eng.step():
+        live = max((len(s.blocks) for s in eng.scheduler.running),
+                   default=0)
+        max_live = max(max_live, live)
+    assert all(r.done for r in reqs)
+    assert [r.out for r in reqs] == out_c, \
+        "window reclaim must not change the tokens (masking already " \
+        "hid the reclaimed blocks)"
+    rep = eng.report()
+    assert rep["window_reclaimed"] > 0, \
+        "a 23-token generation at window=8 must return dead blocks"
+    assert rep["free_blocks"] == rep["n_usable"]
+    # steady state: in-window blocks + the write-target block
+    assert max_live <= 8 // 4 + 1, max_live
+    eng.pool.validate(check_contents=False)
+
+
+def test_windowed_paged_preemption_still_token_identical():
+    """Preempting a windowed request after its table rolled (prefix
+    blocks already reclaimed) must recompute the exact same tokens: the
+    re-prefill writes the whole chain again and re-reclaims."""
+    cfg, params = _setup("mixtral-8x7b", n_layers=2, window=8)
+    kv8 = _kv8(cfg)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab, (6,), dtype=np.int32)
+               for _ in range(3)]
+    out_small, eng_small = _run_engine(
+        params, cfg, prompts, quant=kv8, max_new=12,
+        paged=True, block_size=4, n_blocks=8, max_batch=4)
+    assert eng_small.scheduler.n_preemptions > 0, \
+        "7-usable-block pool with 3 growing requests must preempt"
+    out_big, _ = _run_engine(
+        params, cfg, prompts, quant=kv8, max_new=12,
+        paged=True, block_size=4, n_blocks=40, max_batch=4)
+    assert out_small == out_big
+    assert eng_small.pool.free_blocks == eng_small.pool.n_usable
+
+
+def test_window_reclaim_spares_shared_prefix_blocks():
+    """Reclaim goes through the refcount path: a block out of MY window
+    but still mapped by another request's table must survive for that
+    reader -- only my reference drops."""
+    cfg, _ = _setup("mixtral-8x7b", n_layers=2, window=8)
+    from repro.serving.scheduler import Scheduler
+    pool = PagedKVPool(cfg, n_blocks=20, block_size=4, quant=_kv8(cfg))
+    sch = Scheduler(pool, max_len=64, max_batch=4)
+
+    def stub_prefill(seq, tokens):
+        seq.length = len(tokens)
+        seq.last_tok = 1
+        if not seq.req.out:
+            seq.req.out.append(1)
+
+    base = np.arange(12, dtype=np.int32)
+    a = E.Request(prompt=base.copy(), max_new_tokens=20)
+    b = E.Request(prompt=base[:10].copy(), max_new_tokens=2)  # stays in-window
+    sch.submit(a)
+    sch.submit(b)
+    sch.admit(stub_prefill)
+    seq_a, seq_b = sch.running
+    shared = set(seq_a.blocks) & set(seq_b.blocks)
+    assert shared, "same-prefix admissions must share prefix blocks"
+    # grow a alone until the shared blocks fall out of a's window (b, at
+    # 10 resident tokens, reclaims nothing)
+    for _ in range(8):
+        sch.ensure_append_capacity()
+        seq_a.length += 1
+        seq_a.req.out.append(1)
+    sch.reclaim_out_of_window()
+    assert seq_a.freed_prefix >= 3, seq_a.freed_prefix
+    assert seq_b.freed_prefix == 0
+    rolled = [blk for blk in shared if blk not in seq_a.blocks]
+    assert rolled, "a's dead prefix included shared blocks"
+    for blk in rolled:
+        assert pool.refcount(blk) >= 1 and blk in seq_b.blocks, \
+            "b still maps the block: reclaim may only drop a's reference"
+    pool.validate()
+    for s in list(sch.running):
+        sch.finish(s)
+    assert pool.free_blocks == pool.n_usable
+
+
+# ---------------------------------------------------------------------------
+# State slot pool: ssm / hybrid / enc-dec through Engine(paged=True)
+# ---------------------------------------------------------------------------
+
+def _token_identity(name, *, quant_fn=None, max_new=5, **red):
+    cfg = get_config(name).reduced(**red)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    quant = quant_fn(cfg) if quant_fn else None
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, (5 + i,), dtype=np.int32)
+               for i in range(3)]
+    out_c, _ = _run_engine(params, cfg, prompts, quant=quant,
+                           max_new=max_new)
+    out_p, eng = _run_engine(params, cfg, prompts, quant=quant,
+                             max_new=max_new, paged=True, block_size=4)
+    assert out_p == out_c, (name, out_p, out_c)
+    rep = eng.report()
+    assert rep["used_state_slots"] == 0 and rep["free_state_slots"] > 0
+    eng.pool.validate()
+    return eng
+
+
+def test_paged_engine_serves_ssm_through_slot_pool():
+    """Pure-SSM arch: no blocks at all, per-request conv+state rows in
+    the slot pool; greedy decode token-identical to the contiguous
+    engine (slot addressing is memory management, not math)."""
+    eng = _token_identity("mamba2-130m")
+    assert not eng.pool.needs_blocks
+    assert eng.pool.free_blocks == eng.pool.n_usable  # untouched
+
+
+def test_paged_engine_serves_hybrid_blocks_plus_slots():
+    """Hybrid (jamba-style, attn_every=2 so the smoke config really
+    interleaves): attention layers page KV blocks, mamba layers ride
+    the slot pool, one scheduler owns both."""
+    eng = _token_identity("jamba-1.5-large-398b", quant_fn=_kv8,
+                          n_layers=2, attn_every=2)
+    assert eng.pool.needs_blocks and eng.pool.slots is not None
+    assert eng.pool.free_blocks == eng.pool.n_usable
+
+
+def test_paged_engine_serves_encdec_cross_slots():
+    """Enc-dec (audio): decoder self-attention KV pages in blocks, the
+    projected cross-K/V lives in slot rows filled at prefill and
+    replayed every decode step."""
+    eng = _token_identity("seamless-m4t-medium", quant_fn=_kv8)
+    assert eng.pool.needs_blocks and eng.pool.slots is not None
+
+
+# ---------------------------------------------------------------------------
+# Property sweep: random scheduler walks at window < max_len
+# ---------------------------------------------------------------------------
+
+class _WalkReq:
+    """Minimal stand-in for engine.Request (identity the scheduler needs)."""
+    def __init__(self, prompt, max_new_tokens):
+        self.prompt = prompt
+        self.max_new_tokens = max_new_tokens
+        self.temperature = 0.0
+        self.out = []
+        self.done = False
+        self.error = None
+
+
+def _walk_stub_prefill(seq, tokens):
+    seq.length = len(tokens)
+    if seq.req.out:
+        seq.last_tok = seq.req.out[-1]
+    else:
+        seq.last_tok = int(tokens[-1] * 31 % 97)
+        seq.req.out.append(seq.last_tok)
+
+
+def _check_windowed(pool, sch, window):
+    """Pool invariants + the reclaim contract: after a reclaim point, no
+    running request holds a block whose tokens are ALL out of its
+    window, and (external refcount model) a block's refcount equals the
+    number of running tables mapping it -- shared-prefix reclaim drops
+    exactly the reclaimer's reference."""
+    from collections import Counter
+    pool.validate()
+    bs = pool.block_size
+    for s in sch.running:
+        for i, _ in enumerate(s.blocks):
+            logical = s.freed_prefix + i
+            last_pos = (logical + 1) * bs - 1
+            assert last_pos > s.length - window, \
+                (f"request holds fully-out-of-window block: logical "
+                 f"{logical} ends at {last_pos}, length {s.length}, "
+                 f"window {window}")
+    model = Counter(int(b) for s in sch.running for b in s.blocks)
+    actual = {b: r for b, r in pool._ref.items() if r > 0}
+    assert dict(model) == actual, (dict(model), actual)
+
+
+def _windowed_walk(ops, lengths, max_news, *, window=8, prefix_cache=True):
+    cfg = get_config("mixtral-8x7b").reduced(n_layers=2, window=window)
+    kv8 = dataclasses.replace(cfg.quant, w_bits=None, kv_bits=8)
+    pool = PagedKVPool(cfg, n_blocks=9, block_size=4, quant=kv8,
+                       prefix_cache=prefix_cache)
+    from repro.serving.scheduler import Scheduler
+    sch = Scheduler(pool, max_len=32, max_batch=4)
+    # prompts drawn from two base chains so prefixes collide often
+    bases = [np.arange(24, dtype=np.int32),
+             np.concatenate([np.arange(8),
+                             np.arange(50, 66)]).astype(np.int32)]
+    for i, op in enumerate(ops):
+        ln = 1 + lengths[i % len(lengths)] % 20
+        if op == 0:                                    # submit + admit
+            base = bases[i % 2]
+            sch.submit(_WalkReq(base[:ln].copy(),
+                                1 + max_news[i % len(max_news)] % 16))
+            sch.admit(_walk_stub_prefill)
+        elif op == 1 and sch.running:                  # one decode step
+            sch.ensure_append_capacity()   # reclaims, then allocates
+            for s in list(sch.running):
+                tok = int((s.length * 13 + 7) % 97)
+                s.last_tok = tok
+                s.req.out.append(tok)
+                s.length += 1
+                if len(s.req.out) >= s.req.max_new_tokens \
+                        or s.length >= sch.max_len - 1:
+                    sch.finish(s)
+        elif op == 2 and sch.running:                  # preempt youngest
+            sch.preempt(max(sch.running, key=lambda s: s.admitted_at))
+            sch.admit(_walk_stub_prefill)
+        elif op == 3 and sch.running:                  # finish oldest
+            sch.finish(min(sch.running, key=lambda s: s.admitted_at))
+        sch.reclaim_out_of_window()        # the step's reclaim point
+        _check_windowed(pool, sch, window)
+    for s in list(sch.running):                        # drain
+        sch.finish(s)
+    _check_windowed(pool, sch, window)
+    assert pool.free_blocks == pool.n_usable
+
+
+@settings(max_examples=30, deadline=None)
+@given(ops=st.lists(st.integers(0, 3), min_size=4, max_size=40),
+       lengths=st.lists(st.integers(0, 1000), min_size=1, max_size=8),
+       max_news=st.lists(st.integers(0, 1000), min_size=1, max_size=8))
+def test_property_windowed_walk_keeps_invariants(ops, lengths, max_news):
+    """ISSUE 5 satellite: random admit/decode/preempt walks with
+    window < max_len hold the reclaim + refcount invariants at every
+    step, with the prefix cache sharing blocks across the walk."""
+    _windowed_walk(ops, lengths, max_news)
+
+
+@settings(max_examples=15, deadline=None)
+@given(ops=st.lists(st.integers(0, 3), min_size=4, max_size=30),
+       lengths=st.lists(st.integers(0, 1000), min_size=1, max_size=8),
+       max_news=st.lists(st.integers(0, 1000), min_size=1, max_size=8))
+def test_property_windowed_walk_no_prefix_cache(ops, lengths, max_news):
+    """Same walk with the prefix cache off: reclaimed blocks go straight
+    back to the free list (PR-2 reclamation + window rolling)."""
+    _windowed_walk(ops, lengths, max_news, prefix_cache=False)
+
+
+def test_ssm_slot_exhaustion_queues_fcfs():
+    """More requests than state slots: admission must wait for a slot
+    (FCFS), not crash or starve -- every request still completes."""
+    cfg = get_config("mamba2-130m").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    eng = E.Engine(params, cfg, n_slots=2, max_len=32, paged=True,
+                   block_size=4, max_batch=2)     # 2 state slots
+    rng = np.random.default_rng(9)
+    reqs = [E.Request(prompt=rng.integers(0, cfg.vocab, (4 + i,),
+                                          dtype=np.int32),
+                      max_new_tokens=3) for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done and r.error is None for r in reqs)
+    assert all(len(r.out) == 3 for r in reqs)
+    assert eng.pool.slots.free_slots == eng.pool.slots.n_slots

@@ -1,0 +1,206 @@
+"""Chunked-prefill benchmark: decode stall + admission gate vs whole-prompt.
+
+Companion to benchmarks/paged_kv_capacity.py (capacity) for the serving
+loop's *latency* story: decode is HBM-bound, so the time a running
+decode waits on a step is set by how much prompt work the step
+co-schedules.  Whole-prompt admission processes an entire arriving
+prompt alongside the decode batch -- every running request stalls
+O(prompt tokens) in that step, and the admission gate transiently
+demands O(prompt) blocks.  Chunked prefill (ISSUE 6) streams the prompt
+through the step loop ``chunk_tokens`` at a time fused with the decode
+bucket, and reclaims out-of-window blocks between chunks, so the stall
+is bounded by the chunk budget and the gate by
+``blocks_for(window + chunk) + 2``.
+
+The simulation drives the *real* ``PagedKVPool`` + ``Scheduler`` (same
+code the engine runs; stub execution, no model forward) through an
+identical workload in both modes -- a resident decode batch plus a
+stream of long prompts arriving mid-generation -- and reports:
+
+* ``stall_tokens`` per step while a prompt is in flight and at least
+  one decode is running (p50/p95/max): prompt tokens co-scheduled with
+  the decodes, the per-step decode-latency tax,
+* ``stall_free_frac``: fraction of decode steps with zero prompt work,
+* per-arrival admission-gate blocks (``Scheduler.lifetime_need``),
+* ``max_servable_prompt``: the longest prompt the gate admits at all.
+
+Results go to ``BENCH_chunked_prefill.json``; the CI ``bench-smoke``
+job gates chunked p95 <= chunk budget < whole-prompt p95 and the gate/
+servable-length wins.
+
+Usage:  PYTHONPATH=src:. python -m benchmarks.chunked_prefill \
+            [--out BENCH_chunked_prefill.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import numpy as np
+
+WINDOW = 8
+BLOCK_SIZE = 4
+MAX_LEN = 256
+N_BLOCKS = 41            # 40 usable
+MAX_BATCH = 8
+CHUNK_TOKENS = 4
+
+DECODE_REQS = 4          # resident decode batch (short prompts)
+DECODE_PROMPT = 8
+DECODE_NEW = 96
+# long prompts arriving while the decodes run: (arrival step, length)
+ARRIVALS = [(8, 48), (24, 96), (40, 120)]
+ARRIVAL_NEW = 4
+
+
+class _Req:
+    def __init__(self, prompt, n):
+        self.prompt, self.max_new_tokens = prompt, n
+        self.out, self.done, self.error = [], False, None
+        self.temperature = 0.0
+        self.finish_reason = None
+
+
+def _build(chunk):
+    import jax  # noqa: F401  (pulls in the repro stack)
+    from repro.configs import get_config
+    from repro.serving.paged_cache import PagedKVPool
+    from repro.serving.scheduler import Scheduler
+
+    cfg = get_config("mixtral-8x7b").reduced(
+        n_layers=2, window=WINDOW, max_seq_len=MAX_LEN)
+    kv8 = dataclasses.replace(cfg.quant, w_bits=None, kv_bits=8)
+    pool = PagedKVPool(cfg, n_blocks=N_BLOCKS, block_size=BLOCK_SIZE,
+                       quant=kv8)
+    return pool, Scheduler(pool, max_len=MAX_LEN, max_batch=MAX_BATCH,
+                           chunk_tokens=chunk)
+
+
+def simulate(chunk) -> dict:
+    """One serving run: ``chunk=None`` = whole-prompt baseline."""
+    pool, sch = _build(chunk)
+    rng = np.random.default_rng(0)
+    decodes = [_Req(rng.integers(0, 99, DECODE_PROMPT).astype(np.int32),
+                    DECODE_NEW) for _ in range(DECODE_REQS)]
+    arrivals = [_Req(rng.integers(0, 99, ln).astype(np.int32), ARRIVAL_NEW)
+                for _, ln in ARRIVALS]
+    for r in decodes:
+        sch.submit(r)
+
+    stall_this_step = [0]
+
+    def whole_prefill(seq, tokens):
+        stall_this_step[0] += len(tokens) - seq.cached_len
+        seq.length = len(tokens)
+        seq.last_tok = 1
+        if not seq.req.out:
+            seq.req.out.append(1)
+
+    def advance(seq):
+        seq.req.out.append(1)
+        seq.length += 1
+        if len(seq.req.out) >= seq.req.max_new_tokens \
+                or seq.length >= sch.max_len - 1:
+            sch.finish(seq)
+
+    stalls, decode_steps, gate_blocks = [], 0, []
+    step = 0
+    while sch.has_work or any(not r.done for r in arrivals):
+        for (at, _), req in zip(ARRIVALS, arrivals):
+            if at == step:
+                gate_blocks.append(sch.lifetime_need(
+                    len(req.prompt) + req.max_new_tokens))
+                sch.submit(req)
+        stall_this_step[0] = 0
+        if chunk is None:
+            sch.admit(whole_prefill)     # the whole prompt lands here
+            if sch.running:
+                sch.ensure_append_capacity()
+                for s in list(sch.running):
+                    advance(s)
+        else:
+            sch.admit_chunked()
+            plan = sch.ensure_step_capacity(sch.plan_step())
+            for s, n in plan:
+                if s.prefilling:
+                    stall_this_step[0] += n
+                    s.length += n
+                    sch.register_progress(s)
+                    if s.length >= len(s.pending):
+                        s.pending = None
+                        s.last_tok = 1
+                        s.req.out.append(1)
+                        if len(s.req.out) >= s.req.max_new_tokens:
+                            sch.finish(s)
+                else:
+                    advance(s)
+        if any(not s.prefilling for s in sch.running):
+            decode_steps += 1
+            if stall_this_step[0]:
+                stalls.append(stall_this_step[0])
+        step += 1
+        assert step < 5000, "simulation did not drain"
+
+    assert all(r.done and r.error is None for r in decodes + arrivals), \
+        "workload must complete in both modes"
+    assert pool.free_blocks == pool.n_usable
+    # the longest prompt the submit gate admits at all (+new budget)
+    servable = max((ln for ln in range(1, MAX_LEN - 1)
+                    if sch.lifetime_need(ln + ARRIVAL_NEW)
+                    <= pool.n_usable), default=0)
+    stalls = stalls or [0]
+    return dict(
+        chunk_tokens=chunk,
+        steps=step,
+        p50_stall_tokens=float(np.percentile(stalls, 50)),
+        p95_stall_tokens=float(np.percentile(stalls, 95)),
+        max_stall_tokens=int(max(stalls)),
+        stall_free_frac=1.0 - len(stalls) / max(decode_steps, 1),
+        admission_gate_blocks=gate_blocks,
+        max_servable_prompt=servable,
+        preemptions=sch.n_preemptions,
+        window_reclaimed=pool.report()["window_reclaimed"],
+    )
+
+
+def table(whole: dict, chunked: dict) -> str:
+    hdr = ("| mode | p50 stall | p95 stall | max | stall-free | "
+           "gate blocks | servable |\n|---|---|---|---|---|---|---|\n")
+    out = []
+    for r in (whole, chunked):
+        mode = ("whole-prompt" if r["chunk_tokens"] is None
+                else f"chunked({r['chunk_tokens']})")
+        out.append(
+            f"| {mode} | {r['p50_stall_tokens']:.0f} | "
+            f"{r['p95_stall_tokens']:.0f} | {r['max_stall_tokens']} | "
+            f"{r['stall_free_frac']*100:.0f}% | "
+            f"{max(r['admission_gate_blocks'])} | "
+            f"{r['max_servable_prompt']} |")
+    return hdr + "\n".join(out) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_chunked_prefill.json")
+    ap.add_argument("--chunk-tokens", type=int, default=CHUNK_TOKENS)
+    args = ap.parse_args()
+    whole = simulate(None)
+    chunked = simulate(args.chunk_tokens)
+    result = dict(
+        workload=dict(window=WINDOW, block_size=BLOCK_SIZE,
+                      max_len=MAX_LEN, n_blocks=N_BLOCKS,
+                      decode_requests=DECODE_REQS,
+                      decode_new_tokens=DECODE_NEW,
+                      arrivals=[dict(step=at, prompt_len=ln)
+                                for at, ln in ARRIVALS]),
+        whole_prompt=whole, chunked=chunked)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(table(whole, chunked))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,9 +14,17 @@ prefix, so the paged run also exercises the refcounted copy-on-write
 prefix cache: later requests acquire the resident prefix blocks and
 prefill only their suffix (watch the hit/COW counters in the report).
 
+``--chunk-tokens N`` (with ``--paged``) turns on chunked prefill:
+prompts stream through the step loop N tokens at a time, fused with the
+decode batch, so running decodes never stall on an arriving prompt.
+The demo streams one request live through the async API -- a
+StreamHandle with an ``on_token`` callback printing tokens as they are
+emitted while the rest of the queue decodes alongside.
+
 Run:  PYTHONPATH=src python examples/serve_llm.py [--new-tokens 12]
                                                   [--paged]
                                                   [--block-size 16]
+                                                  [--chunk-tokens 8]
 """
 
 import argparse
@@ -32,14 +40,22 @@ from repro.serving import engine as E
 
 
 def serve(params, cfg, prompts, quant, new_tokens, *, paged=False,
-          block_size=16):
+          block_size=16, chunk_tokens=None, stream_one=False):
     eng = E.Engine(params, cfg, n_slots=4, max_len=128, quant=quant,
-                   paged=paged, block_size=block_size)
+                   paged=paged, block_size=block_size,
+                   chunk_tokens=chunk_tokens)
     reqs = [E.Request(prompt=p, max_new_tokens=new_tokens) for p in prompts]
-    for r in reqs:
-        eng.submit(r)
+    if stream_one:
+        # async API showcase: watch request 0's tokens arrive live while
+        # the whole queue decodes around it
+        reqs[0].on_token = lambda t: print(f"  stream req0 -> {t}",
+                                           flush=True)
+    handles = [eng.submit(r) for r in reqs]
     t0 = time.perf_counter()
-    eng.run()
+    if stream_one:
+        for _ in handles[0].tokens():   # drive via the handle...
+            pass
+    eng.run()                           # ...then drain the rest
     dt = time.perf_counter() - t0
     total = sum(len(r.out) for r in reqs)
     return reqs, total / dt, eng
@@ -53,6 +69,9 @@ def main():
                          "engine (kv_bits=8 KV planes + block tables)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="tokens per pool block (--paged)")
+    ap.add_argument("--chunk-tokens", type=int, default=None,
+                    help="chunked prefill budget per step (--paged): "
+                         "prompts stream in fused with the decode batch")
     args = ap.parse_args()
 
     cfg = get_config("llama3-8b").reduced(
@@ -81,7 +100,9 @@ def main():
           f"{'weights + paged KV pool' if args.paged else 'weights'}) …")
     reqs_q, tps_q, eng_q = serve(qparams, cfg, prompts, qcfg,
                                  args.new_tokens, paged=args.paged,
-                                 block_size=args.block_size)
+                                 block_size=args.block_size,
+                                 chunk_tokens=args.chunk_tokens,
+                                 stream_one=args.paged)
 
     agree = np.mean([
         np.mean(np.asarray(a.out[:4]) == np.asarray(b.out[:4]))
@@ -103,6 +124,10 @@ def main():
               f"{rep['prefix_hit_tokens']} prompt tokens served from "
               f"residency, {rep['cow_copies']} copy-on-writes, "
               f"{rep['evictions']} evictions")
+        if rep["chunk_tokens"]:
+            print(f"chunked prefill: {rep['chunk_tokens']} tokens/step "
+                  f"budget, {rep['chunk_tokens_processed']} prompt tokens "
+                  f"streamed through the step loop")
     assert all(r.done for r in reqs_bf + reqs_q)
     print("done.")
 

@@ -58,11 +58,13 @@ def _segsum(a):
     return jnp.where(mask, diff, -jnp.inf)
 
 
-def _ssd_chunked(x, dt, a, b, c, chunk: int):
+def _ssd_chunked(x, dt, a, b, c, chunk: int, init_state=None):
     """Chunked SSD scan.
 
     x: (B, S, H, P) input (already dt-scaled outside? no -- raw), dt: (B, S, H)
     softplus'd step, a: (H,) negative decay rates, b/c: (B, S, G, N).
+    ``init_state (B,H,P,N)`` seeds the inter-chunk recurrence (chunked
+    prefill continuing a cached state); None starts from zero.
     Returns (y (B,S,H,P), final_state (B,H,P,N)).
     """
     bsz, s, h, p = x.shape
@@ -105,7 +107,8 @@ def _ssd_chunked(x, dt, a, b, c, chunk: int):
         h_new = h_prev * jnp.exp(atot)[:, :, None, None] + st
         return h_new, y_off_c
 
-    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    init = (jnp.zeros((bsz, h, p, n), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
     final, y_off = jax.lax.scan(
         step, init, (states.transpose(1, 0, 2, 3, 4),
                      a_tot.transpose(1, 0, 2),
@@ -121,8 +124,12 @@ def ssm_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
               cache: Optional[dict] = None, quant=None):
     """Mamba-2 mixer over ``x (B, S, d_model)``.
 
-    With ``cache`` (decode): S must be 1; the conv buffer and SSD state are
-    updated in O(1).  Returns ``(y, new_cache)``.
+    With ``cache`` and S == 1 (decode): the conv buffer and SSD state
+    are updated in O(1).  With ``cache`` and S > 1 (prefill / chunked
+    prefill): the pass *continues* from the cached conv rows and SSD
+    state and leaves the cache ready for the next chunk or decode step
+    -- a zeroed cache makes this identical to prefilling from scratch.
+    Returns ``(y, new_cache)``.
 
     Paged serving hands the cache as *slot-pool rows*: conv/state leaves
     are ``(n_slots+1, ...)`` and ``cache["slots"] (B,)`` maps batch lanes
@@ -160,9 +167,17 @@ def ssm_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
 
     new_cache = None
     if cache is None or s > 1:
-        # causal depthwise conv along S (window d_conv)
+        # causal depthwise conv along S (window d_conv).  With a cache
+        # the buffer holds the previous d_conv-1 raw xBC rows, so an
+        # s > 1 pass CONTINUES where the last chunk (or decode step)
+        # stopped -- chunked prefill's contract.  A fresh cache is
+        # zeros, which reproduces the old zero padding exactly
         pad = cfg.ssm_d_conv - 1
-        xbc_p = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))
+        if cache is not None:
+            xbc_p = jnp.concatenate(
+                [cache["conv"].astype(xbc.dtype), xbc], axis=1)
+        else:
+            xbc_p = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))
         windows = jnp.stack(
             [xbc_p[:, i:i + s, :] for i in range(cfg.ssm_d_conv)], axis=2)
         xbc_c = jnp.einsum("bswc,wc->bsc", windows.astype(jnp.float32),
@@ -178,16 +193,19 @@ def ssm_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
             dt = jnp.pad(dt, ((0, 0), (0, pad_s), (0, 0)))
             bh = jnp.pad(bh, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
             ch = jnp.pad(ch, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
-        y, state = _ssd_chunked(xh, dt, a, bh, ch, cfg.ssm_chunk)
+        y, state = _ssd_chunked(xh, dt, a, bh, ch, cfg.ssm_chunk,
+                                init_state=(None if cache is None
+                                            else cache["state"]))
         # D skip connection on the conv'd input
         y = y[:, :s] + (params["D"][None, None, :, None]
                         * xh[:, :s].astype(jnp.float32))
         if cache is not None:
-            # prefill: fill the decode cache (conv tail = last raw xBC rows)
-            pad_c = cfg.ssm_d_conv - 1
-            tail = jnp.pad(xbc, ((0, 0), (pad_c, 0), (0, 0)))[:, s:s + pad_c]
-            new_cache = dict(cache, conv=tail.astype(cache["conv"].dtype),
-                             state=state)
+            # fill the decode cache: conv tail = last d_conv-1 raw xBC
+            # rows of the continued buffer (a chunk shorter than the
+            # conv window keeps the older cached rows it still needs)
+            new_cache = dict(
+                cache, state=state,
+                conv=xbc_p[:, s:s + pad].astype(cache["conv"].dtype))
     else:
         assert s == 1
         # update conv ring buffer: (B, d_conv-1, conv_dim) holds last inputs

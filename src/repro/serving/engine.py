@@ -30,6 +30,28 @@ carry position -1 and are masked out of every attention read and every
 pool write), so a stream of varied lengths compiles O(log max_len)
 programs instead of one per distinct length.
 
+**Chunked prefill** (``chunk_tokens``, paged only): a prompt no longer
+prefills whole at admission -- it streams through the step loop
+``chunk_tokens`` at a time, fused with the decode batch
+(:meth:`Engine._fused_forward`): decode lanes carry 1 real token and
+chunk lanes up to ``chunk_tokens``, all padded to one bucketed ``(B,
+S)`` dispatch whose pad rows are position-masked by the Sq>=1 paged
+kernel.  Running decodes therefore emit a token *every* step while a
+long prompt trickles in, instead of stalling O(prompt).  SSM/hybrid
+archs cannot pad the recurrence, so their mixed steps split into one
+decode dispatch plus exact-length B=1 chunk dispatches riding the
+cached conv/state continuation (:mod:`repro.models.ssm`); vlm/audio
+frontends fill their side inputs in one pass and keep whole-prompt
+admission.
+
+The submit/stream API is asynchronous at the request level:
+:meth:`Engine.submit` returns a :class:`StreamHandle` (iterate tokens
+as they are emitted, poll, cancel); requests take ``on_token``
+callbacks (fired in emission order), ``timeout`` deadlines (expiry
+finishes the request with ``finish_reason='timeout'``), and
+cancellation releases blocks and state slots through the scheduler's
+refcount path mid-prefill or mid-decode.
+
 Serving uses quantized packed weights (the paper's technique); pass
 ``quant=cfg.quant`` after :func:`repro.models.model.quantize_params`.
 """
@@ -37,8 +59,9 @@ Serving uses quantized packed weights (the paper's technique); pass
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -155,8 +178,8 @@ def prefill_bucket(s: int, cap: int, floor: int = 8) -> int:
 # Requests and per-request state
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
-class Request:
+@dataclasses.dataclass(eq=False)    # identity equality: queue membership
+class Request:                      # must never compare prompt arrays
     prompt: np.ndarray              # (s,) int32
     max_new_tokens: int = 16
     temperature: float = 0.0        # 0 = greedy
@@ -170,6 +193,59 @@ class Request:
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
     error: Optional[str] = None     # set on clean rejection (paged)
+    # -- async streaming API -------------------------------------------------
+    on_token: Optional[Callable[[int], None]] = None   # emission-order cb
+    timeout: Optional[float] = None  # seconds from submit to deadline
+    deadline: Optional[float] = None  # absolute (engine clock); computed
+                                      # from ``timeout`` at submit if unset
+    # why the request stopped: length | timeout | cancelled | rejected
+    finish_reason: Optional[str] = None
+
+
+class StreamHandle:
+    """Async view of a submitted request.
+
+    The engine is single-threaded, so "async" means the handle *drives*
+    it: :meth:`tokens` steps the engine until the request advances and
+    yields each output token in emission order, which lets callers
+    interleave many requests (each with its own handle or ``on_token``
+    callback) without threads.  :meth:`cancel` aborts the request and
+    releases its memory through the refcount path."""
+
+    def __init__(self, engine: "Engine", req: Request):
+        self.engine, self.req = engine, req
+
+    @property
+    def done(self) -> bool:
+        return self.req.done
+
+    @property
+    def finish_reason(self) -> Optional[str]:
+        return self.req.finish_reason
+
+    def cancel(self) -> bool:
+        return self.engine.cancel(self.req)
+
+    def tokens(self, max_steps: int = 10_000):
+        """Yield output tokens as they are emitted, stepping the engine
+        as needed; returns when the request finishes (or the engine
+        runs out of work / ``max_steps``)."""
+        sent = steps = 0
+        while True:
+            while sent < len(self.req.out):
+                yield self.req.out[sent]
+                sent += 1
+            if self.req.done or steps >= max_steps:
+                return
+            if not self.engine.step():
+                return
+            steps += 1
+
+    def result(self, max_steps: int = 10_000) -> Request:
+        """Block (drive the engine) until the request finishes."""
+        for _ in self.tokens(max_steps):
+            pass
+        return self.req
 
 
 def _tree_write_slot(batched, single, slot: int):
@@ -218,12 +294,27 @@ class Engine:
                  paged: bool = False, block_size: int = 16,
                  n_blocks: Optional[int] = None,
                  max_batch: Optional[int] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 chunk_tokens: Optional[int] = None,
+                 clock: Optional[Callable[[], float]] = None):
         self.params, self.cfg, self.quant = params, cfg, quant
         self.n_slots, self.max_len = n_slots, max_len
         self.paged = paged
         self.steps = 0
         self._seed_counter = 0      # default per-request sampling seeds
+        # deadline clock, injectable for deterministic timeout tests
+        self._clock = clock or time.monotonic
+        self._deadlines = False     # fast-path: no deadline submitted yet
+        self.chunk_tokens_processed = 0
+        if chunk_tokens is not None and not paged:
+            raise ValueError("chunk_tokens requires paged=True (chunked "
+                             "prefill writes through the block pool)")
+        # whole-prompt frontends (vlm patch embeds, audio encoder frames)
+        # fill their side inputs in one prefill pass; those families keep
+        # whole-prompt admission
+        if chunk_tokens is not None and cfg.family in ("vlm", "audio"):
+            chunk_tokens = None
+        self.chunk_tokens = chunk_tokens
         if paged:
             from repro.serving.paged_cache import (PagedKVPool,
                                                    needs_state_slots)
@@ -258,7 +349,8 @@ class Engine:
                 n_state_slots=self.max_batch if stateful else 0,
                 enc_len=enc)
             self.scheduler = Scheduler(self.pool, max_len=max_len,
-                                       max_batch=self.max_batch)
+                                       max_batch=self.max_batch,
+                                       chunk_tokens=self.chunk_tokens)
             self.n_batch_blocks = max_len // block_size   # table width
         else:
             self.caches = M.init_caches(cfg, n_slots, max_len, quant=quant)
@@ -266,14 +358,78 @@ class Engine:
             self.queue: list[Request] = []
 
     # -- request lifecycle -------------------------------------------------
-    def submit(self, req: Request):
+    def submit(self, req: Request) -> StreamHandle:
         if getattr(req, "seed", None) is None:
             req.seed = self._seed_counter     # stable across preemption
             self._seed_counter += 1
+        if getattr(req, "timeout", None) is not None \
+                and getattr(req, "deadline", None) is None:
+            req.deadline = self._clock() + req.timeout
+        if getattr(req, "deadline", None) is not None:
+            self._deadlines = True
         if self.paged:
             self.scheduler.submit(req)
         else:
             self.queue.append(req)
+        return StreamHandle(self, req)
+
+    def cancel(self, req: Request) -> bool:
+        """Abort ``req``: no further tokens are emitted and no further
+        ``on_token`` callbacks fire; paged requests release their
+        blocks and state slot through the scheduler's refcount path
+        (mid-prefill included).  Returns False if the request already
+        finished or is unknown to this engine."""
+        if req.done:
+            return False
+        if self.paged:
+            return self.scheduler.cancel(req)
+        if req in self.queue:
+            self.queue.remove(req)
+        else:
+            for i, seq in enumerate(self.slot_req):
+                if seq is not None and seq.req is req:
+                    self.slot_req[i] = None
+                    break
+            else:
+                return False
+        req.done, req.finish_reason = True, "cancelled"
+        return True
+
+    def _expire(self) -> None:
+        """Finish every request whose deadline has passed: a clean
+        completion with ``finish_reason='timeout'`` whose memory
+        returns through the same path cancellation uses."""
+        if not self._deadlines:
+            return
+        now = self._clock()
+
+        def expired(req):
+            dl = getattr(req, "deadline", None)
+            return dl is not None and now >= dl and not req.done
+
+        if self.paged:
+            sch = self.scheduler
+            stale = [r for r in list(sch.waiting) if expired(r)]
+            stale += [s.req for s in list(sch.running) if expired(s.req)]
+            for req in stale:
+                sch.cancel(req, reason="timeout")
+            return
+        for req in [r for r in self.queue if expired(r)]:
+            self.queue.remove(req)
+            req.done, req.finish_reason = True, "timeout"
+        for i, seq in enumerate(self.slot_req):
+            if seq is not None and expired(seq.req):
+                self.slot_req[i] = None
+                seq.req.done, seq.req.finish_reason = True, "timeout"
+
+    def _emit(self, seq, tok: int) -> None:
+        """Append an output token and fire ``on_token``: emission order
+        == callback order, and a finished request (cancelled/expired by
+        another lane's callback mid-step) never reaches here again."""
+        seq.req.out.append(tok)
+        cb = getattr(seq.req, "on_token", None)
+        if cb is not None:
+            cb(tok)
 
     def _admit(self):
         for slot in range(self.n_slots):
@@ -383,10 +539,11 @@ class Engine:
         seq = SequenceState(req=req, length=len(req.prompt))
         seq.last_tok = self._sample_token(
             np.asarray(logits[0], np.float32), seq)
-        req.out.append(seq.last_tok)
+        self._emit(seq, seq.last_tok)
         self.slot_req[slot] = seq
 
     def _contiguous_step(self) -> bool:
+        self._expire()
         self._admit()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
@@ -407,36 +564,57 @@ class Engine:
         self.steps += 1
         for slot in active:
             seq = self.slot_req[slot]
+            if seq is None or seq.req.done:   # cancelled by a callback
+                continue
             seq.last_tok = self._sample_token(logits[slot], seq)
-            seq.req.out.append(seq.last_tok)
+            self._emit(seq, seq.last_tok)
             seq.length += 1
             if len(seq.req.out) >= seq.req.max_new_tokens \
                     or seq.length >= self.max_len - 1:
                 seq.req.done = True
+                seq.req.finish_reason = "length"
                 self.slot_req[slot] = None
         return True
 
     # -- paged path ----------------------------------------------------------
     def _paged_prefill(self, seq, tokens: np.ndarray):
-        """Scheduler admission callback: block-table *suffix* prefill.
+        """Scheduler admission callback (whole-prompt mode): prefill the
+        whole uncached suffix in one pass, then sample the first token
+        (or restore the pending input on a warm resume)."""
+        start = seq.cached_len
+        logits = self._suffix_forward(
+            seq, np.asarray(tokens[start:], np.int32), start)
+        seq.length = len(tokens)
+        if seq.req.out:
+            # re-admission after preemption: the pending input token is
+            # already known; the recomputed logits would reproduce it
+            seq.last_tok = seq.req.out[-1]
+        else:
+            seq.last_tok = self._sample_token(
+                np.asarray(logits[0], np.float32), seq)
+            self._emit(seq, seq.last_tok)
 
-        The first ``seq.cached_len`` tokens of the chain are already
-        resident in the pool (prefix-cache hit: blocks acquired, maybe
-        copy-on-written by the scheduler); only the suffix runs through
-        the model, at B=1 with its length bucketed to the next power of
-        two (pad tokens carry position -1: their pool writes are dropped
+    def _suffix_forward(self, seq, suffix: np.ndarray, start: int):
+        """B=1 block-table *suffix* forward: chain positions ``start..``
+        run through the model and land in ``seq``'s blocks.
+
+        The first ``start`` tokens of the chain are already resident in
+        the pool (prefix-cache hit, or -- chunked prefill -- the chunks
+        a previous step landed); only ``suffix`` runs through the
+        model, at B=1 with its length bucketed to the next power of two
+        (pad tokens carry position -1: their pool writes are dropped
         and their attention rows masked, so a varied suffix stream
         compiles O(log max_len) programs).  The suffix K/V lands
         directly in the request's blocks via the paged scatter write,
         and its queries attend through the shared prefix blocks and the
         fresh suffix in the same kernel pass -- no contiguous B=1 cache
-        or copy step exists anymore.
+        or copy step exists anymore.  Stateful archs additionally
+        continue the slot-resident conv/SSD state (and cross cache), so
+        a chunk picks up exactly where the last one stopped.  Returns
+        the ``(1, V)`` logits at the last real suffix token.
         """
-        total = len(tokens)
-        start = seq.cached_len
-        suffix = np.asarray(tokens[start:], np.int32)
         s = len(suffix)
-        assert s >= 1, "prefix cache must leave >= 1 token to compute"
+        assert s >= 1, "suffix forward needs >= 1 token to compute"
         p = prefill_bucket(s, self.max_len) if self._bucketable else s
         toks = np.zeros(p, np.int32)
         toks[:s] = suffix
@@ -468,26 +646,63 @@ class Engine:
         logits, caches = prefill_step_bucketed(
             self.params, batch, caches, self.cfg, self.quant)
         self.pool.absorb(caches)
-        seq.length = total
-        if seq.req.out:
-            # re-admission after preemption: the pending input token is
-            # already known; the recomputed logits would reproduce it
-            seq.last_tok = seq.req.out[-1]
-        else:
-            seq.last_tok = self._sample_token(
-                np.asarray(logits[0], np.float32), seq)
-            seq.req.out.append(seq.last_tok)
+        return logits
 
     def _decode_bucket(self, n: int) -> int:
         return min(_next_pow2(n), self.max_batch)
 
     def _paged_step(self) -> bool:
         sch = self.scheduler
-        sch.admit(self._paged_prefill)
-        if not sch.running:
-            return False
-        sch.ensure_append_capacity()    # reclaims out-of-window blocks too
-        running = sch.running
+        self._expire()
+        if self.chunk_tokens is None:
+            # whole-prompt mode: admission prefills, the step decodes
+            sch.admit(self._paged_prefill)
+            if not sch.running:
+                return False
+            sch.ensure_append_capacity()   # reclaims out-of-window too
+            plan = [(s, 1) for s in sch.running]
+        else:
+            sch.admit_chunked()
+            plan = sch.ensure_step_capacity(sch.plan_step())
+            if not plan:
+                return False
+        rows = self._forward_plan(plan)
+        self._advance(plan, rows)
+        return True
+
+    def _forward_plan(self, plan) -> list:
+        """Run the planned step's forward pass(es); returns per-entry
+        logits rows aligned with ``plan``.
+
+        Attention-only configs fuse everything into ONE dispatch
+        (:meth:`_fused_forward`) whenever a chunk is in flight; pure
+        decode steps keep the exact ``(B, 1)`` ``serve_step`` program.
+        Stateful archs (SSM/hybrid) cannot pad the recurrence, so their
+        mixed steps split: one bucketed decode dispatch plus one
+        exact-length B=1 dispatch per chunk lane, riding the cached
+        conv/state continuation -- same scheduler step, same starvation
+        bound, separate programs."""
+        if any(n > 1 for _, n in plan) and self._bucketable:
+            return self._fused_forward(plan)
+        rows: list = [None] * len(plan)
+        decodes = [(i, s) for i, (s, n) in enumerate(plan)
+                   if not s.prefilling]
+        for i, (seq, n) in enumerate(plan):
+            if not seq.prefilling:
+                continue
+            toks = np.asarray(seq.pending[seq.length:seq.length + n],
+                              np.int32)
+            logits = self._suffix_forward(seq, toks, seq.length)
+            rows[i] = np.asarray(logits[0], np.float32)
+        if decodes:
+            logits = self._decode_forward([s for _, s in decodes])
+            for j, (i, _) in enumerate(decodes):
+                rows[i] = logits[j]
+        return rows
+
+    def _decode_forward(self, running) -> np.ndarray:
+        """One bucketed ``(B, 1)`` decode dispatch over ``running``;
+        returns the (bucketed) f32 logits rows."""
         bb = self._decode_bucket(len(running))
         # bucket the table width too: the paged kernel's grid walks one
         # iteration per table entry, so a full-width (max_len/block_size)
@@ -519,16 +734,80 @@ class Engine:
         logits, caches = serve_step(self.params, batch, caches,
                                     self.cfg, self.quant)
         self.pool.absorb(caches)
+        return np.asarray(logits, np.float32)
+
+    def _fused_forward(self, plan) -> list:
+        """ONE dispatch for a mixed decode + chunk-prefill step.
+
+        Decode lanes carry 1 real token, chunk lanes up to
+        ``chunk_tokens``, padded to a common bucketed ``(B, S)``; pad
+        tokens carry position -1 (attention rows masked, pool writes
+        dropped) exactly like bucketed prefill pads, and the Sq>=1
+        paged kernel masks causality by absolute position per row, so
+        lanes of different real lengths coexist in one grid.  Per-lane
+        logits are gathered at ``last_idx`` (the lane's last real
+        token).  Attention-only configs (``_bucketable``); pool slots
+        never exist here."""
+        bb = self._decode_bucket(len(plan))
+        smax = max(n for _, n in plan)
+        sq = prefill_bucket(smax, self.max_len)
+        nb = min(_next_pow2(max(len(s.blocks) for s, _ in plan) or 1),
+                 self.n_batch_blocks)
+        toks = np.zeros((bb, sq), np.int32)
+        pos = np.full((bb, sq), -1, np.int32)  # pads: masked everywhere
+        last = np.zeros(bb, np.int32)
+        lens = np.zeros(bb, np.int32)
+        tables = np.zeros((bb, nb), np.int32)  # 0 = the null block
+        offsets = np.zeros(bb, np.int32)
+        for i, (seq, n) in enumerate(plan):
+            if seq.prefilling:
+                toks[i, :n] = np.asarray(
+                    seq.pending[seq.length:seq.length + n], np.int32)
+            else:
+                toks[i, 0] = seq.last_tok
+            pos[i, :n] = np.arange(seq.length, seq.length + n)
+            last[i], lens[i] = n - 1, seq.length
+            tables[i, :len(seq.blocks)] = seq.blocks
+            offsets[i] = seq.freed_prefix
+        batch = {"tokens": jnp.asarray(toks),
+                 "positions": jnp.asarray(pos),
+                 "last_idx": jnp.asarray(last, jnp.int32)}
+        caches = self.pool.step_caches(tables, lens, block_offsets=offsets)
+        logits, caches = prefill_step_bucketed(
+            self.params, batch, caches, self.cfg, self.quant)
+        self.pool.absorb(caches)
         logits = np.asarray(logits, np.float32)
+        return [logits[i] for i in range(len(plan))]
+
+    def _advance(self, plan, rows) -> None:
+        """Consume a step's logits: advance lengths, sample/emit decode
+        tokens (and the first token of a request whose prefill just
+        completed), finish what is done."""
+        sch = self.scheduler
         self.steps += 1
-        for i, seq in enumerate(list(running)):
-            seq.last_tok = self._sample_token(logits[i], seq)
-            seq.req.out.append(seq.last_tok)
-            seq.length += 1
+        for (seq, n), row in zip(plan, rows):
+            if seq.req.done:    # cancelled/expired by a callback mid-step
+                continue
+            if seq.prefilling:
+                seq.length += n
+                self.chunk_tokens_processed += n
+                sch.register_progress(seq)
+                if seq.length < len(seq.pending):
+                    continue                   # more chunks to stream
+                seq.pending = None
+                if seq.req.out:
+                    # warm resume: the pending input token is known
+                    seq.last_tok = seq.req.out[-1]
+                    continue
+                seq.last_tok = self._sample_token(row, seq)
+                self._emit(seq, seq.last_tok)
+            else:
+                seq.last_tok = self._sample_token(row, seq)
+                self._emit(seq, seq.last_tok)
+                seq.length += 1
             if len(seq.req.out) >= seq.req.max_new_tokens \
                     or seq.length >= self.max_len - 1:
                 sch.finish(seq)
-        return True
 
     # -- decode loop --------------------------------------------------------
     def step(self) -> bool:
@@ -553,7 +832,9 @@ class Engine:
             rep.update(running=len(self.scheduler.running),
                        waiting=len(self.scheduler.waiting),
                        preemptions=self.scheduler.n_preemptions,
-                       rejections=self.scheduler.n_rejections)
+                       rejections=self.scheduler.n_rejections,
+                       chunk_tokens=self.chunk_tokens,
+                       chunk_tokens_processed=self.chunk_tokens_processed)
             return rep
         active = sum(r is not None for r in self.slot_req)
         return dict(n_slots=self.n_slots, running=active,

@@ -24,10 +24,30 @@ numpy arrays): cached length, next input token, owned blocks, the state
 slot, sampling params, and the per-request RNG stream (sampling is
 keyed by ``(request seed, output index)``, so a preempted-then-resumed
 request reproduces the exact tokens an uncontended run produces even at
-temperature > 0).  Liveness guarantee: a request whose lifetime block
-need exceeds the pool is rejected at submit time, so the oldest running
-request can always grow -- preemption of everything younger frees or
-re-caches enough blocks -- and the preemption loop terminates.
+temperature > 0).
+
+**Chunked prefill** (``chunk_tokens``): instead of prefilling a whole
+prompt in one admission pass (stalling every running decode for
+O(prompt) and transiently demanding O(prompt) blocks), admission only
+acquires the prefix-cache hit and a state slot, and the prompt then
+*streams* through the step loop: :meth:`Scheduler.plan_step` composes
+each step from every decoding request (always, one token each) plus a
+``chunk_tokens`` budget of prompt tokens split oldest-first among
+prefilling requests, and :meth:`Scheduler.ensure_step_capacity`
+allocates just that step's blocks.  Decodes are therefore never crowded
+out of a step, and per-step prompt work -- the decode-latency tax -- is
+bounded by the chunk budget.
+
+Liveness guarantee: a request whose *peak held-block count* exceeds the
+pool is rejected at submit time (:meth:`Scheduler.lifetime_need`), so
+the oldest running request can always grow -- preemption of everything
+younger frees or re-caches enough blocks -- and the preemption loop
+terminates.  Whole-prompt mode pins that peak at the full
+``blocks_for(prompt + new)`` transient; chunked prefill grows at most
+one chunk per step and reclaims out-of-window blocks *between chunks*,
+so for sliding-window configs the peak drops to
+``blocks_for(window + chunk) + 2`` and prompts far longer than the pool
+become servable.
 
 Sliding-window reclaim: before each step's allocations
 (:meth:`Scheduler.ensure_append_capacity`) every running request's
@@ -70,6 +90,14 @@ class SequenceState:                   # removed from lists by object
     # by this owner are skipped, so chain bookkeeping on every
     # finish/preempt costs O(new blocks), not O(chain length)
     chain_memo: ChainMemo = dataclasses.field(default_factory=ChainMemo)
+    # chunked prefill: the full token chain still streaming in (prompt
+    # plus any fed-back outputs); None once every token's KV is
+    # resident and the request is decoding
+    pending: Optional[np.ndarray] = None
+
+    @property
+    def prefilling(self) -> bool:
+        return self.pending is not None and self.length < len(self.pending)
 
     @property
     def temperature(self) -> float:
@@ -109,16 +137,22 @@ class SequenceState:                   # removed from lists by object
 class Scheduler:
     """FCFS admission + preemption-by-eviction over a :class:`PagedKVPool`.
 
-    The engine drives it: :meth:`admit` before each step (prefilling via
-    the engine's callback), :meth:`ensure_append_capacity` to make room
-    for the step's KV append (allocating fresh blocks and copy-on-write
-    copies of shared ones), then :meth:`finish`/:meth:`reject` as
-    requests complete.
+    The engine drives it.  Whole-prompt mode (``chunk_tokens=None``):
+    :meth:`admit` before each step (prefilling via the engine's
+    callback), :meth:`ensure_append_capacity` to make room for the
+    step's KV append (allocating fresh blocks and copy-on-write copies
+    of shared ones).  Chunked mode: :meth:`admit_chunked`, then
+    :meth:`plan_step` to compose the fused decode+chunk step and
+    :meth:`ensure_step_capacity` to make room for it.  Either way
+    :meth:`finish`/:meth:`cancel`/:meth:`reject` retire requests.
     """
 
-    def __init__(self, pool: PagedKVPool, *, max_len: int, max_batch: int):
+    def __init__(self, pool: PagedKVPool, *, max_len: int, max_batch: int,
+                 chunk_tokens: Optional[int] = None):
+        assert chunk_tokens is None or chunk_tokens >= 1, chunk_tokens
         self.pool = pool
         self.max_len, self.max_batch = max_len, max_batch
+        self.chunk_tokens = chunk_tokens
         self.waiting: deque = deque()      # of engine.Request
         self.running: list[SequenceState] = []
         self.n_preemptions = 0
@@ -144,22 +178,37 @@ class Scheduler:
                              f"max_len-1 ({self.max_len - 1})")
             return
         if self.pool.needs_blocks:
-            # the gate stays at the full un-reclaimed worst case even
-            # for windowed configs: prefill (and recompute-preemption's
-            # re-prefill) writes the whole chain in one pass, so the
-            # O(window) steady state does not bound the transient and
-            # the liveness argument needs the full count (ROADMAP PR-5
-            # open item: chunked prefill would lift this)
-            need = self.pool.blocks_for(min(worst, self.max_len))
+            need = self.lifetime_need(worst)
             if need > self.pool.n_usable:
-                self.reject(req, f"needs {need} blocks at its longest, "
+                self.reject(req, f"holds up to {need} blocks at once, "
                                  f"pool has {self.pool.n_usable}")
                 return
         self.waiting.append(req)
 
+    def lifetime_need(self, worst_tokens: int) -> int:
+        """Peak block count a request may *hold at once* over its
+        lifetime -- the submit-time liveness gate.
+
+        Whole-prompt mode writes the entire chain in one admission
+        pass, so even windowed configs pay the full un-reclaimed
+        ``blocks_for(worst)`` transient (the old PR-5 open item).
+        Chunked prefill grows a request at most ``chunk_tokens`` per
+        step and reclaims out-of-window blocks *between chunks*, so a
+        sliding-window request peaks at the in-window blocks plus one
+        chunk's growth plus the two boundary partials -- prompts far
+        longer than the pool become servable.  Without a window nothing
+        is reclaimed mid-prefill (the whole chain stays live), so
+        chunking changes decode latency, not this bound."""
+        full = self.pool.blocks_for(min(worst_tokens, self.max_len))
+        w = self.pool.cfg.window
+        if self.chunk_tokens is None or w is None:
+            return full
+        return min(full, self.pool.blocks_for(w + self.chunk_tokens) + 2)
+
     def reject(self, req, reason: str) -> None:
         req.error = f"rejected: {reason}"
         req.done = True
+        req.finish_reason = "rejected"
         self.n_rejections += 1
 
     # -- admission -----------------------------------------------------------
@@ -225,6 +274,80 @@ class Scheduler:
             self._reclaim_seq(seq)
             self.running.append(seq)
 
+    def admit_chunked(self) -> None:
+        """FCFS *chunked* admission: acquire the prefix-cache hit and a
+        state slot, set up the pending chain, and return -- no blocks
+        are allocated and no model pass runs here.  The prompt then
+        streams through the step loop (:meth:`plan_step` /
+        :meth:`ensure_step_capacity`) one chunk budget at a time, so
+        the capacity gate is the *first chunk's* block need plus one
+        block of headroom, not the whole prompt."""
+        assert self.chunk_tokens is not None, \
+            "admit_chunked needs Scheduler(chunk_tokens=...)"
+        while self.waiting and len(self.running) < self.max_batch:
+            req = self.waiting[0]
+            if self.pool.slots is not None \
+                    and self.pool.slots.free_slots == 0:
+                break      # FCFS: wait for a finishing request's slot
+            if self._blocked_head is not None \
+                    and self._blocked_head[0] is req \
+                    and self._blocked_head[1] == self.pool.version:
+                break      # nothing changed since this head last failed
+            seq = SequenceState(req=req)
+            tokens = seq.resume_tokens()
+            hit = self.pool.acquire_prefix(tokens)
+            seq.blocks = list(hit.ids)
+            seq.cached_len = seq.length = hit.cached_len
+            seq.pending = tokens
+            if self.pool.needs_blocks:
+                first = min(self.chunk_tokens, len(tokens) - seq.length)
+                # blocks the running requests' own next step will draw:
+                # admitting into them would only get this (the
+                # youngest) request preempted right back out
+                reserve = sum(self._span_need(s, self._next_n(s))
+                              for s in self.running)
+                if self._span_need(seq, first) + 1 + reserve \
+                        > self.pool.free_blocks:
+                    self.pool.release(hit.ids)     # back to the cache
+                    # memoize AFTER the release (it bumps pool.version)
+                    self._blocked_head = (req, self.pool.version)
+                    break                          # FCFS: no skipping
+            self.waiting.popleft()
+            self._blocked_head = None
+            if self.pool.slots is not None:
+                seq.slot = self.pool.alloc_slot()
+            self.pool.record_hit(hit, len(tokens))
+            seq.admitted_at = self._admit_counter
+            self._admit_counter += 1
+            self.running.append(seq)
+
+    # -- chunked step planning -----------------------------------------------
+    def _next_n(self, seq: SequenceState) -> int:
+        """Tokens ``seq`` would process in a full-budget step."""
+        if not seq.prefilling:
+            return 1
+        return min(self.chunk_tokens, len(seq.pending) - seq.length)
+
+    def plan_step(self) -> list:
+        """Compose one continuous-batching step as ``(seq, n_tokens)``
+        entries.  Every decoding request is planned every step (one
+        token each): prompt work can *never* crowd a decode out of a
+        step, which is the starvation bound the property suite asserts.
+        Prefilling requests split the ``chunk_tokens`` budget
+        oldest-first, so per-step prompt work -- the decode-latency tax
+        -- is bounded by the budget and the head of the prefill line
+        drains in ceil(remaining / chunk_tokens) steps."""
+        plan = [(s, 1) for s in self.running if not s.prefilling]
+        budget = self.chunk_tokens or 0
+        for s in sorted((s for s in self.running if s.prefilling),
+                        key=lambda s: s.admitted_at):
+            if budget <= 0:
+                break
+            n = min(budget, len(s.pending) - s.length)
+            plan.append((s, n))
+            budget -= n
+        return plan
+
     # -- sliding-window reclaim ----------------------------------------------
     def _reclaim_seq(self, seq: SequenceState) -> None:
         """Release every leading block of ``seq`` whose tokens are all
@@ -258,48 +381,69 @@ class Scheduler:
         for seq in self.running:
             self._reclaim_seq(seq)
 
-    # -- decode-step capacity ------------------------------------------------
-    def _append_need(self, seq: SequenceState) -> int:
-        """Blocks this step's KV append costs: 1 fresh block when the
-        chain is block-aligned, 1 COW copy when the write would land in
-        a block another table still maps, else 0."""
-        if not self.pool.needs_blocks:
+    # -- step capacity -------------------------------------------------------
+    def _span_need(self, seq: SequenceState, n: int) -> int:
+        """Blocks writing ``n`` tokens at position ``seq.length`` costs:
+        fresh blocks to cover the span, plus 1 COW copy when the first
+        write lands in a partial block another table still maps."""
+        if not self.pool.needs_blocks or n <= 0:
             return 0
-        if seq.length % self.pool.block_size == 0:
-            return 1
-        if self.pool.refcount(seq.blocks[-1]) > 1:
-            return 1
-        return 0
+        have = seq.freed_prefix + len(seq.blocks)
+        need = max(0, self.pool.blocks_for(seq.length + n) - have)
+        if seq.length % self.pool.block_size and seq.blocks \
+                and self.pool.refcount(seq.blocks[-1]) > 1:
+            need += 1
+        return need
 
     def ensure_append_capacity(self) -> None:
-        """Allocate this step's new blocks (fresh + copy-on-write),
+        """Whole-prompt mode's per-step capacity call: every running
+        request appends one decode token.  (The chunked loop calls
+        :meth:`ensure_step_capacity` with its plan instead.)"""
+        self.ensure_step_capacity([(s, 1) for s in self.running])
+
+    def ensure_step_capacity(self, plan: list) -> list:
+        """Allocate the planned step's blocks (fresh + copy-on-write),
         evicting the youngest running request(s) while the pool is
-        short.  Out-of-window blocks are reclaimed first -- freeing a
-        dead prefix can make preemption unnecessary.  Terminates: the
-        oldest request alone always fits (submit-time rejection bounds
-        any single request's lifetime need to the pool size, and
-        preempting every younger request returns all other blocks to
-        refcount 0)."""
+        short; returns the plan minus preempted entries.  Out-of-window
+        blocks are reclaimed first -- freeing a dead prefix can make
+        preemption unnecessary, and with chunked prefill this runs
+        *between chunks*, so a windowed request's table rolls while its
+        prompt is still streaming in and its held-block peak stays at
+        :meth:`lifetime_need`, not O(prompt).  Terminates: the oldest
+        request alone always fits (the submit gate bounds any single
+        request's peak hold by the pool size, and preempting every
+        younger request returns all other blocks to refcount 0)."""
         self.reclaim_out_of_window()
         if not self.pool.needs_blocks:
-            return
+            return plan
         while True:
-            need = sum(self._append_need(s) for s in self.running)
+            need = sum(self._span_need(s, n) for s, n in plan)
             if need <= self.pool.free_blocks:
                 break
             assert len(self.running) > 1, \
                 "pool cannot hold the oldest request (submit gate broken)"
-            self.preempt(max(self.running, key=lambda s: s.admitted_at))
-        fresh = [s for s in self.running
-                 if s.length % self.pool.block_size == 0]
-        if fresh:      # one alloc = one pos-reset scatter per layer
-            ids = self.pool.alloc(len(fresh))
-            for seq, bid in zip(fresh, ids):
-                seq.blocks.append(bid)
-        for seq in self.running:
-            if seq.length % self.pool.block_size \
-                    and self.pool.refcount(seq.blocks[-1]) > 1:
-                seq.blocks[-1] = self.pool.cow(seq.blocks[-1])
+            victim = max(self.running, key=lambda s: s.admitted_at)
+            self.preempt(victim)
+            plan = [(s, n) for s, n in plan if s is not victim]
+        grow = [(s, self.pool.blocks_for(s.length + n)
+                 - (s.freed_prefix + len(s.blocks)))
+                for s, n in plan]
+        grow = [(s, g) for s, g in grow if g > 0]
+        if grow:       # one alloc = one pos-reset scatter per layer
+            ids = self.pool.alloc(sum(g for _, g in grow))
+            k = 0
+            for seq, g in grow:
+                seq.blocks.extend(ids[k:k + g])
+                k += g
+        for seq, n in plan:
+            if seq.length % self.pool.block_size == 0 or not seq.blocks:
+                continue
+            # the partial block the first write lands in (NOT blocks[-1]
+            # -- a multi-token chunk may have grown past it just above)
+            j = seq.length // self.pool.block_size - seq.freed_prefix
+            if self.pool.refcount(seq.blocks[j]) > 1:
+                seq.blocks[j] = self.pool.cow(seq.blocks[j])
+        return plan
 
     def _release_seq(self, seq: SequenceState) -> None:
         """Register the chain (newly filled blocks become hits for
@@ -328,11 +472,42 @@ class Scheduler:
         self.waiting.appendleft(seq.req)
         self.n_preemptions += 1
 
+    def register_progress(self, seq: SequenceState) -> None:
+        """Index the blocks a freshly landed chunk filled in the prefix
+        cache: a same-prefix request admitted mid-prefill shares the
+        chain that is already resident (copy-on-write protects the
+        growing tail).  Rolled tables skip registration, same as
+        :meth:`_release_seq`.  O(new blocks) via the chain memo."""
+        if seq.freed_prefix == 0:
+            self.pool.register_chain(seq.token_chain(), seq.blocks,
+                                     memo=seq.chain_memo)
+
     # -- completion ----------------------------------------------------------
-    def finish(self, seq: SequenceState) -> None:
+    def finish(self, seq: SequenceState, reason: str = "length") -> None:
         self._release_seq(seq)
         self.running.remove(seq)
         seq.req.done = True
+        seq.req.finish_reason = reason
+
+    def cancel(self, req, reason: str = "cancelled") -> bool:
+        """Abort ``req`` wherever it lives.  A running request --
+        decoding or mid-chunked-prefill -- releases every block and its
+        state slot through the refcount path (the zero-leak property
+        the harness asserts); a waiting request just leaves the queue.
+        Returns False for unknown (or already finished) requests."""
+        for seq in self.running:
+            if seq.req is req:
+                self._release_seq(seq)
+                self.running.remove(seq)
+                break
+        else:
+            try:
+                self.waiting.remove(req)
+            except ValueError:
+                return False
+        req.done = True
+        req.finish_reason = reason
+        return True
 
     @property
     def has_work(self) -> bool:

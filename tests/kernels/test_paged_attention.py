@@ -179,6 +179,38 @@ def test_paged_sq_causality_within_suffix():
                                    rtol=2e-6, atol=2e-6)
 
 
+@pytest.mark.parametrize("window", [None, 8])
+def test_paged_mixed_sq_lanes_match_single_lane_calls(window):
+    """The fused continuous-batching step (ISSUE 6) batches lanes with
+    *different* real query counts into one dispatch: chunk-prefill lanes
+    carry Sq real rows, decode lanes 1 real row, the rest padded at
+    q_pos=-1.  Every real row must equal the same query issued in a
+    lane-shaped call of its own -- per-row position masking, not lane
+    shape, decides what a query sees."""
+    paged, _ = _paged_inputs(8, sq=4, lens=(19, 7))
+    q, kp, ks, vp, vs, pos, tables, q_pos = paged
+    d = q.shape[-1]
+    qp = np.asarray(q_pos).copy()
+    qp[1] = -1
+    for g in range(2):
+        qp[1, g * 4] = 6       # lane 1: one decode row per group (ln-1)
+    qp = jnp.asarray(qp)
+    rows = np.array([0, 4])    # lane 1's real rows
+    for impl in ("reference", "interpret"):
+        y = np.asarray(ops.paged_kv_cache_attention(
+            q, kp, ks, vp, vs, pos, tables, qp, d=d, window=window,
+            impl=impl))
+        y0 = np.asarray(ops.paged_kv_cache_attention(
+            q[0:1], kp, ks, vp, vs, pos, tables[0:1], qp[0:1], d=d,
+            window=window, impl=impl))
+        np.testing.assert_allclose(y[0], y0[0], rtol=2e-6, atol=2e-6)
+        y1 = np.asarray(ops.paged_kv_cache_attention(
+            q[1:2, :, rows], kp, ks, vp, vs, pos, tables[1:2],
+            qp[1:2, rows], d=d, window=window, impl=impl))
+        np.testing.assert_allclose(y[1][:, rows], y1[0],
+                                   rtol=2e-6, atol=2e-6)
+
+
 # ---------------------------------------------------------------------------
 # Sliding-window boundaries (ISSUE 5): the kernel's window mask + the
 # grid's dead-block skip across all impls

@@ -1,0 +1,586 @@
+"""Continuous batching: chunked prefill + the async streaming engine.
+
+ISSUE 6 rewrote the serving loop's liveness argument: admission no
+longer prefills a whole prompt in one pass (stalling every decode for
+O(prompt) and transiently demanding O(prompt) blocks) -- prompts stream
+through the step loop ``chunk_tokens`` at a time, fused with the decode
+bucket, and out-of-window blocks are reclaimed *between chunks*.  This
+suite is the proof the new argument leans on:
+
+* **Property walks** drive the real :class:`Scheduler` (stub execution,
+  no model forward) through random submit/chunk/decode/cancel/preempt
+  sequences and assert, after every step: (a) no decode is ever crowded
+  out of a step -- the starvation bound; (b) the per-step prefill
+  budget is saturated oldest-first; (c) block refcounts exactly match
+  the running tables (external Counter model) and ``pool.validate()``
+  holds; (d) windowed requests never hold more than the
+  ``lifetime_need`` block bound; (e) cancellation -- mid-prefill
+  included -- and the end-of-walk drain leak zero blocks and zero
+  state slots.
+* **Token identity**: chunked greedy decode at several chunk sizes
+  (including non-divisors of block_size and window) is token-identical
+  to the whole-prompt paged path and to the contiguous engine, across
+  mixtral (window < max_len, fused mixed-Sq dispatch), mamba2
+  (slot-state continuation) and jamba attn_every=2 (split hybrid path).
+* **Async API**: ``on_token`` callbacks fire in emission order with the
+  emitted ids, deadline expiry finishes with ``finish_reason='timeout'``
+  and frees memory, and a cancelled request never sees another callback.
+* **Liveness win**: a windowed prompt whose whole-prompt block need
+  exceeds the pool is rejected by the old gate but served -- correctly
+  -- by the chunked one.
+
+Kernel-level mixed-Sq parity (decode rows riding a chunk lane's Sq>1
+dispatch) lives in tests/kernels/test_paged_attention.py.
+"""
+
+import dataclasses
+from collections import Counter
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:    # property tests skip (not error) without hypothesis
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serving import engine as E
+from repro.serving.paged_cache import PagedKVPool
+from repro.serving.scheduler import Scheduler
+
+
+def _setup(name="llama3-8b", **red):
+    cfg = get_config(name).reduced(**red)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    return cfg, params
+
+
+def _kv8(cfg):
+    return dataclasses.replace(cfg.quant, w_bits=None, kv_bits=8)
+
+
+def _run(params, cfg, prompts, *, quant, max_new=4, **kw):
+    eng = E.Engine(params, cfg, n_slots=2, max_len=32, quant=quant, **kw)
+    reqs = [E.Request(prompt=p.copy(), max_new_tokens=max_new)
+            for p in prompts]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done and r.error is None for r in reqs)
+    return [r.out for r in reqs], eng
+
+
+# ---------------------------------------------------------------------------
+# Token identity: chunked == whole-prompt == contiguous, per family
+# ---------------------------------------------------------------------------
+
+def _chunked_identity(name, chunks, *, quant_fn=None, max_new=4, **red):
+    """Greedy decode through three memory regimes must agree token for
+    token: chunking changes *when* prompt KV lands, never what it is.
+    Prompt lengths 5/9/14 straddle block (4) and chunk boundaries so
+    partial tails, non-divisor chunks and the fused mixed decode+chunk
+    steps all occur."""
+    cfg = get_config(name).reduced(**red)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    quant = quant_fn(cfg) if quant_fn else None
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, (n,), dtype=np.int32)
+               for n in (5, 9, 14)]
+    out_c, _ = _run(params, cfg, prompts, quant=quant, max_new=max_new)
+    out_w, _ = _run(params, cfg, prompts, quant=quant, max_new=max_new,
+                    paged=True, block_size=4)
+    assert out_w == out_c, (name, out_w, out_c)
+    for ck in chunks:
+        out_k, eng = _run(params, cfg, prompts, quant=quant,
+                          max_new=max_new, paged=True, block_size=4,
+                          chunk_tokens=ck)
+        assert out_k == out_c, (name, ck, out_k, out_c)
+        eng.pool.validate()
+        assert eng.pool.free_blocks == eng.pool.n_usable
+        if eng.pool.slots is not None:
+            assert eng.pool.slots.free_slots == eng.pool.slots.n_slots
+        rep = eng.report()
+        assert rep["chunk_tokens"] == ck
+        assert rep["chunk_tokens_processed"] > 0, \
+            "prompts must have streamed through the chunked path"
+
+
+def test_chunked_identity_mixtral_windowed():
+    """Attention family at window(8) < max_len(32): chunks 3 and 6 divide
+    neither block_size=4 nor the window, and the fused mixed-Sq dispatch
+    carries decode lanes alongside chunk lanes once the first request
+    starts decoding."""
+    _chunked_identity("mixtral-8x7b", [3, 4, 6], quant_fn=_kv8,
+                      n_layers=2, window=8)
+
+
+def test_chunked_identity_mamba2():
+    """Pure SSM: chunks continue the slot-resident conv tail + SSD state
+    exactly where the previous chunk stopped (no pad tokens touch the
+    recurrence)."""
+    _chunked_identity("mamba2-130m", [3, 5])
+
+
+def test_chunked_identity_jamba_hybrid():
+    """Hybrid attn_every=2: attention layers write paged KV through the
+    chunk's block table while mamba layers ride the state continuation
+    -- the split (non-fused) mixed-step path."""
+    _chunked_identity("jamba-1.5-large-398b", [3, 8], quant_fn=_kv8,
+                      n_layers=2, attn_every=2)
+
+
+# ---------------------------------------------------------------------------
+# The liveness win: prompts longer than the pool, and the stall bound
+# ---------------------------------------------------------------------------
+
+def test_windowed_prompt_beyond_pool_only_serves_chunked():
+    """A 40-token prompt needs blocks_for(43) = 11 blocks held at once
+    under whole-prompt admission -- more than this 7-usable-block pool,
+    so the old gate must reject it.  Chunked prefill peaks at
+    blocks_for(window + chunk) + 2 = 5 blocks (the table rolls between
+    chunks), so the same pool serves it -- with the same tokens the
+    contiguous engine produces."""
+    cfg, params = _setup("mixtral-8x7b", n_layers=2, window=8)
+    kv8 = _kv8(cfg)
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab, (40,), dtype=np.int32)
+
+    whole = E.Engine(params, cfg, n_slots=2, max_len=64, quant=kv8,
+                     paged=True, block_size=4, n_blocks=8)
+    r_w = E.Request(prompt=prompt.copy(), max_new_tokens=3)
+    whole.submit(r_w)
+    assert r_w.done and r_w.finish_reason == "rejected"
+    assert "blocks" in r_w.error
+
+    chunked = E.Engine(params, cfg, n_slots=2, max_len=64, quant=kv8,
+                       paged=True, block_size=4, n_blocks=8,
+                       chunk_tokens=4)
+    r_c = E.Request(prompt=prompt.copy(), max_new_tokens=3)
+    chunked.submit(r_c)
+    chunked.run()
+    assert r_c.done and r_c.error is None and len(r_c.out) == 3
+    assert chunked.scheduler.n_rejections == 0
+    chunked.pool.validate()
+    assert chunked.pool.free_blocks == chunked.pool.n_usable
+
+    # oracle: the contiguous engine at the same max_len
+    eng = E.Engine(params, cfg, n_slots=2, max_len=64, quant=kv8)
+    r_o = E.Request(prompt=prompt.copy(), max_new_tokens=3)
+    eng.submit(r_o)
+    eng.run()
+    assert r_c.out == r_o.out, (r_c.out, r_o.out)
+
+
+def test_decode_emits_every_step_while_long_prompt_prefills():
+    """The acceptance bound, measured on the real engine: once a 30-token
+    prompt starts streaming in, the already-decoding request still emits
+    exactly one token on *every* engine step (zero stall steps), and the
+    prompt work co-scheduled per step never exceeds the chunk budget."""
+    cfg, params = _setup("mixtral-8x7b", n_layers=2, window=8)
+    kv8 = _kv8(cfg)
+    rng = np.random.default_rng(11)
+    eng = E.Engine(params, cfg, n_slots=2, max_len=64, quant=kv8,
+                   paged=True, block_size=4, chunk_tokens=3)
+    a = E.Request(prompt=rng.integers(0, cfg.vocab, (5,), dtype=np.int32),
+                  max_new_tokens=24)
+    eng.submit(a)
+    while not a.out:               # stream a's own prompt in, first token
+        assert eng.step()
+    b = E.Request(prompt=rng.integers(0, cfg.vocab, (30,), dtype=np.int32),
+                  max_new_tokens=2)
+    eng.submit(b)
+    while not b.done:
+        n_a = len(a.out)
+        work = eng.chunk_tokens_processed
+        assert eng.step()
+        assert len(a.out) == n_a + 1, \
+            "decode stalled while the long prompt prefilled"
+        assert eng.chunk_tokens_processed - work <= 3, \
+            "per-step prompt work exceeded the chunk budget"
+    assert b.error is None and len(b.out) == 2
+    eng.run()
+    assert a.done and len(a.out) == 24
+    assert eng.pool.free_blocks == eng.pool.n_usable
+
+
+# ---------------------------------------------------------------------------
+# Property walks: the scheduler under random chunked traffic
+# ---------------------------------------------------------------------------
+
+class _WalkReq:
+    """Minimal stand-in for engine.Request (identity the scheduler needs)."""
+    def __init__(self, prompt, max_new_tokens):
+        self.prompt = prompt
+        self.max_new_tokens = max_new_tokens
+        self.temperature = 0.0
+        self.out = []
+        self.done = False
+        self.error = None
+        self.finish_reason = None
+
+
+def _check_pool(pool, sch, *, held_bound=None):
+    """The exactness invariants: pool internals are self-consistent, a
+    block's refcount equals the number of running tables mapping it
+    (external Counter model -- cancellation/preemption/reclaim drop
+    exactly one reference each), windowed tables never exceed the
+    submit-gate block bound, and every running stateful request holds
+    exactly one slot."""
+    pool.validate()
+    if pool.needs_blocks:
+        model = Counter(int(b) for s in sch.running for b in s.blocks)
+        actual = {b: r for b, r in pool._ref.items() if r > 0}
+        assert dict(model) == actual, (dict(model), actual)
+        if held_bound is not None:
+            for s in sch.running:
+                assert len(s.blocks) <= held_bound, \
+                    (len(s.blocks), held_bound, s.length)
+    if pool.slots is not None:
+        assert all(s.slot >= 0 for s in sch.running)
+        assert pool.slots.free_slots \
+            == pool.slots.n_slots - len(sch.running)
+
+
+def _stub_step(sch, chunk):
+    """One engine step without the model: admit, plan, assert the
+    scheduling contract, make capacity, then advance exactly the way
+    Engine._advance does (deterministic stub tokens)."""
+    sch.admit_chunked()
+    plan = sch.plan_step()
+    # budget saturation, oldest-first: prefill work in the plan is
+    # min(budget, total remaining), and the head of the prefill line
+    # gets min(budget, its own remaining)
+    pre = sum(n for s, n in plan if s.prefilling)
+    rem = sum(len(s.pending) - s.length
+              for s in sch.running if s.prefilling)
+    assert pre == min(chunk, rem), (pre, chunk, rem)
+    heads = sorted((s for s in sch.running if s.prefilling),
+                   key=lambda s: s.admitted_at)
+    if heads:
+        got = dict((id(s), n) for s, n in plan if s.prefilling)
+        want = min(chunk, len(heads[0].pending) - heads[0].length)
+        assert got.get(id(heads[0]), 0) == want
+    for s, n in plan:
+        assert 1 <= n <= (chunk if s.prefilling else 1), (n, s.prefilling)
+
+    plan = sch.ensure_step_capacity(plan)
+    # the starvation bound: every request still running in decode phase
+    # is in the step -- prompt streaming can never crowd a decode out
+    planned = {id(s) for s, _ in plan}
+    for s in sch.running:
+        if not s.prefilling:
+            assert id(s) in planned, "decode crowded out of a step"
+
+    for seq, n in plan:
+        if seq.prefilling:
+            seq.length += n
+            sch.register_progress(seq)
+            if seq.length < len(seq.pending):
+                continue
+            seq.pending = None
+            if seq.req.out:                     # warm resume
+                seq.last_tok = seq.req.out[-1]
+                continue
+            tok = int((seq.length * 13 + 7) % 97)
+            seq.last_tok = tok
+            seq.req.out.append(tok)
+        else:
+            tok = int((seq.length * 13 + 7) % 97)
+            seq.last_tok = tok
+            seq.req.out.append(tok)
+            seq.length += 1
+        if len(seq.req.out) >= seq.req.max_new_tokens \
+                or seq.length >= sch.max_len - 1:
+            sch.finish(seq)
+
+
+def _chunked_walk(ops, lengths, max_news, chunk, *, name="mixtral-8x7b",
+                  window=8, prefix_cache=True):
+    if name == "mamba2-130m":
+        cfg = get_config(name).reduced()
+        pool = PagedKVPool(cfg, n_blocks=4, block_size=4,
+                           n_state_slots=4, prefix_cache=False)
+    else:
+        red = dict(n_layers=2, **(dict(window=window) if window else {}))
+        cfg = get_config(name).reduced(**red)
+        kv8 = dataclasses.replace(cfg.quant, w_bits=None, kv_bits=8)
+        pool = PagedKVPool(cfg, n_blocks=9, block_size=4, quant=kv8,
+                           prefix_cache=prefix_cache)
+    sch = Scheduler(pool, max_len=32, max_batch=4, chunk_tokens=chunk)
+    bound = pool.blocks_for(window + chunk) + 2 if window else None
+    # prompts drawn from two base chains so prefixes collide often
+    bases = [np.arange(24, dtype=np.int32),
+             np.concatenate([np.arange(8),
+                             np.arange(50, 66)]).astype(np.int32)]
+    cancelled = []
+    for i, op in enumerate(ops):
+        ln = 1 + lengths[i % len(lengths)] % 20
+        if op == 0:                                    # submit
+            base = bases[i % 2]
+            sch.submit(_WalkReq(base[:ln].copy(),
+                                1 + max_news[i % len(max_news)] % 16))
+        elif op in (1, 2):                             # one engine step
+            _stub_step(sch, chunk)
+        elif op == 3:                                  # cancel anywhere
+            reqs = [s.req for s in sch.running] + list(sch.waiting)
+            if reqs:
+                req = reqs[i % len(reqs)]
+                was_prefilling = any(s.req is req and s.prefilling
+                                     for s in sch.running)
+                assert sch.cancel(req)
+                assert req.done and req.finish_reason == "cancelled"
+                cancelled.append((req, was_prefilling))
+        elif op == 4 and sch.running:                  # preempt youngest
+            sch.preempt(max(sch.running, key=lambda s: s.admitted_at))
+        _check_pool(pool, sch, held_bound=bound)
+    steps = 0
+    while sch.has_work:                                # drain
+        _stub_step(sch, chunk)
+        _check_pool(pool, sch, held_bound=bound)
+        steps += 1
+        assert steps < 4000, "drain did not terminate (liveness broken)"
+    assert pool.free_blocks == pool.n_usable, \
+        "drained walk leaked blocks (cancellation or finish path)"
+    if pool.slots is not None:
+        assert pool.slots.free_slots == pool.slots.n_slots
+    for req, _ in cancelled:
+        assert req.done and req.finish_reason == "cancelled"
+
+
+@settings(max_examples=25, deadline=None)
+@given(ops=st.lists(st.integers(0, 4), min_size=4, max_size=40),
+       lengths=st.lists(st.integers(0, 1000), min_size=1, max_size=8),
+       max_news=st.lists(st.integers(0, 1000), min_size=1, max_size=8),
+       chunk=st.integers(1, 6))
+def test_property_chunked_walk_windowed(ops, lengths, max_news, chunk):
+    """Random chunked traffic at window < max_len: starvation bound,
+    budget saturation, exact refcounts, pool.validate, the held-block
+    bound, and zero leaks through cancel/preempt/drain."""
+    _chunked_walk(ops, lengths, max_news, chunk)
+
+
+@settings(max_examples=15, deadline=None)
+@given(ops=st.lists(st.integers(0, 4), min_size=4, max_size=30),
+       lengths=st.lists(st.integers(0, 1000), min_size=1, max_size=8),
+       max_news=st.lists(st.integers(0, 1000), min_size=1, max_size=8),
+       chunk=st.integers(1, 6))
+def test_property_chunked_walk_unwindowed(ops, lengths, max_news, chunk):
+    """Same walk without a window (llama): nothing reclaims mid-prefill,
+    so the full-transient submit gate and the preemption loop carry the
+    liveness argument alone."""
+    _chunked_walk(ops, lengths, max_news, chunk, name="llama3-8b",
+                  window=None)
+
+
+@settings(max_examples=10, deadline=None)
+@given(ops=st.lists(st.integers(0, 4), min_size=4, max_size=30),
+       lengths=st.lists(st.integers(0, 1000), min_size=1, max_size=8),
+       max_news=st.lists(st.integers(0, 1000), min_size=1, max_size=8),
+       chunk=st.integers(1, 6))
+def test_property_chunked_walk_slots_only(ops, lengths, max_news, chunk):
+    """Pure-SSM walk: no blocks at all -- admission, cancellation and
+    the drain must hand every state slot back."""
+    _chunked_walk(ops, lengths, max_news, chunk, name="mamba2-130m",
+                  window=None)
+
+
+def test_cancel_mid_prefill_walk_deterministic():
+    """Pinned regression (no hypothesis needed): cancel a request whose
+    prompt is mid-stream -- acquired prefix blocks, freshly chunk-filled
+    blocks and the COW tail all return through the refcount path."""
+    cfg = get_config("mixtral-8x7b").reduced(n_layers=2, window=8)
+    kv8 = dataclasses.replace(cfg.quant, w_bits=None, kv_bits=8)
+    pool = PagedKVPool(cfg, n_blocks=9, block_size=4, quant=kv8)
+    sch = Scheduler(pool, max_len=32, max_batch=4, chunk_tokens=3)
+    base = np.arange(20, dtype=np.int32)
+    a, b = _WalkReq(base.copy(), 4), _WalkReq(base[:18].copy(), 4)
+    sch.submit(a)
+    sch.submit(b)
+    _stub_step(sch, 3)                 # a streams; b shares a's chain
+    _stub_step(sch, 3)
+    pre = [s for s in sch.running if s.prefilling]
+    assert pre, "walk must cancel while a prefill is actually in flight"
+    for req in (a, b):
+        assert sch.cancel(req)
+        _check_pool(pool, sch)
+    assert pool.free_blocks == pool.n_usable
+    assert not sch.running and not sch.waiting
+
+
+# ---------------------------------------------------------------------------
+# Async API: callbacks, deadlines, cancellation
+# ---------------------------------------------------------------------------
+
+def test_stream_callbacks_fire_in_emission_order():
+    """Per-request ``on_token`` callbacks must see exactly the request's
+    output tokens, in emission order, across interleaved chunked
+    requests."""
+    cfg, params = _setup("mamba2-130m")
+    eng = E.Engine(params, cfg, n_slots=2, max_len=32, paged=True,
+                   block_size=4, chunk_tokens=3)
+    rng = np.random.default_rng(2)
+    calls = []
+    reqs = []
+    for i in range(3):
+        r = E.Request(prompt=rng.integers(0, cfg.vocab, (5 + i,),
+                                          dtype=np.int32),
+                      max_new_tokens=4)
+        r.on_token = (lambda rr: lambda t: calls.append((id(rr), t)))(r)
+        reqs.append(r)
+        eng.submit(r)
+    eng.run()
+    assert all(r.done and len(r.out) == 4 for r in reqs)
+    for r in reqs:
+        assert [t for rid, t in calls if rid == id(r)] == r.out
+    assert len(calls) == sum(len(r.out) for r in reqs)
+
+
+def test_stream_handle_tokens_drives_the_engine():
+    """Iterating a StreamHandle steps the engine until the request
+    finishes; a second in-flight request advances alongside and its
+    handle replays already-emitted tokens before stepping further."""
+    cfg, params = _setup("mamba2-130m")
+    eng = E.Engine(params, cfg, n_slots=2, max_len=32, paged=True,
+                   block_size=4, chunk_tokens=3)
+    rng = np.random.default_rng(4)
+    r1 = E.Request(prompt=rng.integers(0, cfg.vocab, (5,), dtype=np.int32),
+                   max_new_tokens=4)
+    r2 = E.Request(prompt=rng.integers(0, cfg.vocab, (7,), dtype=np.int32),
+                   max_new_tokens=6)
+    h1, h2 = eng.submit(r1), eng.submit(r2)
+    toks = list(h1.tokens())
+    assert toks == r1.out and len(toks) == 4
+    assert h1.done and h1.finish_reason == "length"
+    assert list(h2.tokens()) == r2.out and h2.done
+    assert h2.result().out == r2.out   # already finished: no more steps
+
+
+def test_deadline_expiry_finishes_with_timeout_and_frees_memory():
+    """An injected clock expires one running (mid-prefill) and one
+    waiting request: both finish with ``finish_reason='timeout'``, fire
+    no callbacks, and hand every block back; the surviving request is
+    untouched."""
+    cfg, params = _setup("mixtral-8x7b", n_layers=2, window=8)
+    kv8 = _kv8(cfg)
+    t = [0.0]
+    eng = E.Engine(params, cfg, n_slots=2, max_len=32, quant=kv8,
+                   paged=True, block_size=4, max_batch=2,
+                   chunk_tokens=3, clock=lambda: t[0])
+    rng = np.random.default_rng(6)
+    a = E.Request(prompt=rng.integers(0, cfg.vocab, (4,), dtype=np.int32),
+                  max_new_tokens=6)
+    b_calls, c_calls = [], []
+    b = E.Request(prompt=rng.integers(0, cfg.vocab, (24,), dtype=np.int32),
+                  max_new_tokens=2, timeout=5.0, on_token=b_calls.append)
+    c = E.Request(prompt=rng.integers(0, cfg.vocab, (4,), dtype=np.int32),
+                  max_new_tokens=2, timeout=7.0, on_token=c_calls.append)
+    for r in (a, b, c):
+        eng.submit(r)
+    assert b.deadline == 5.0 and c.deadline == 7.0
+    for _ in range(3):                 # t=0: b mid-prefill, c waiting
+        assert eng.step()
+    assert any(s.req is b and s.prefilling for s in eng.scheduler.running)
+    assert c in eng.scheduler.waiting
+    t[0] = 10.0
+    assert eng.step()                  # expiry sweep, then a's decode
+    for r in (b, c):
+        assert r.done and r.finish_reason == "timeout"
+        assert r.out == [] and r.error is None
+    assert b_calls == [] and c_calls == []
+    model = Counter(int(blk) for s in eng.scheduler.running
+                    for blk in s.blocks)
+    assert dict(model) == {blk: n for blk, n in eng.pool._ref.items()
+                           if n > 0}, "expired requests leaked references"
+    eng.run()
+    assert a.done and a.finish_reason == "length" and len(a.out) == 6
+    eng.pool.validate()
+    assert eng.pool.free_blocks == eng.pool.n_usable
+
+
+@pytest.mark.parametrize("name,red,quant_fn", [
+    ("mixtral-8x7b", dict(n_layers=2, window=8), _kv8),
+    ("jamba-1.5-large-398b", dict(n_layers=2, attn_every=2), _kv8),
+])
+def test_cancel_mid_prefill_leaks_nothing(name, red, quant_fn):
+    """Cancelling through the engine while the prompt is mid-stream must
+    release every block AND the state slot, emit nothing, and leave the
+    engine idle."""
+    cfg, params = _setup(name, **red)
+    eng = E.Engine(params, cfg, n_slots=2, max_len=32,
+                   quant=quant_fn(cfg), paged=True, block_size=4,
+                   chunk_tokens=3)
+    calls = []
+    r = E.Request(prompt=np.arange(20, dtype=np.int32), max_new_tokens=4,
+                  on_token=calls.append)
+    h = eng.submit(r)
+    eng.step()
+    eng.step()
+    seq = eng.scheduler.running[0]
+    assert seq.prefilling and 0 < seq.length < 20
+    assert h.cancel()
+    assert r.done and r.finish_reason == "cancelled"
+    assert r.out == [] and calls == []
+    assert not eng.scheduler.running and not eng.scheduler.waiting
+    eng.pool.validate()
+    assert eng.pool.free_blocks == eng.pool.n_usable
+    if eng.pool.slots is not None:
+        assert eng.pool.slots.free_slots == eng.pool.slots.n_slots
+    assert h.cancel() is False         # already finished
+    assert eng.step() is False         # nothing left to do
+
+
+def test_cancelled_request_never_sees_another_callback():
+    """A peer's callback cancels request b mid-step: b's lane in the
+    same step is skipped, its output stops growing, and its callback
+    count equals its emitted tokens exactly."""
+    cfg, params = _setup("mamba2-130m")
+    eng = E.Engine(params, cfg, n_slots=2, max_len=32, paged=True,
+                   block_size=4, chunk_tokens=3)
+    rng = np.random.default_rng(8)
+    a = E.Request(prompt=rng.integers(0, cfg.vocab, (4,), dtype=np.int32),
+                  max_new_tokens=6)
+    b = E.Request(prompt=rng.integers(0, cfg.vocab, (4,), dtype=np.int32),
+                  max_new_tokens=6)
+    b_calls = []
+    b.on_token = b_calls.append
+
+    def a_cb(tok):                     # a runs first in the step's plan
+        if len(a.out) == 2:
+            eng.cancel(b)
+    a.on_token = a_cb
+    eng.submit(a)
+    eng.submit(b)
+    eng.run()
+    assert a.done and a.finish_reason == "length" and len(a.out) == 6
+    assert b.done and b.finish_reason == "cancelled"
+    assert len(b.out) < 6 and b_calls == b.out, (b_calls, b.out)
+    assert eng.pool.slots.free_slots == eng.pool.slots.n_slots
+
+
+def test_async_api_on_the_contiguous_engine():
+    """The same request-level API (cancel from the queue, deadline
+    expiry on a lane) works on the contiguous engine -- it is a Request
+    contract, not a paged feature."""
+    cfg, params = _setup("mamba2-130m")
+    t = [0.0]
+    eng = E.Engine(params, cfg, n_slots=2, max_len=32,
+                   clock=lambda: t[0])
+    rng = np.random.default_rng(12)
+    mk = lambda n, **kw: E.Request(
+        prompt=rng.integers(0, cfg.vocab, (4,), dtype=np.int32),
+        max_new_tokens=n, **kw)
+    a, b, c = mk(6), mk(8, timeout=5.0), mk(2)
+    ha, hb, hc = eng.submit(a), eng.submit(b), eng.submit(c)
+    assert hc.cancel()                 # straight out of the queue
+    assert c.done and c.finish_reason == "cancelled" and c.out == []
+    eng.step()                         # a + b occupy the two lanes
+    t[0] = 10.0
+    eng.step()                         # b's lane expires
+    assert b.done and b.finish_reason == "timeout"
+    n_b = len(b.out)
+    eng.run()
+    assert a.done and a.finish_reason == "length" and len(a.out) == 6
+    assert len(b.out) == n_b, "expired lane kept emitting"

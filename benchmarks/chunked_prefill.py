@@ -22,7 +22,11 @@ stream of long prompts arriving mid-generation -- and reports:
   the decodes, the per-step decode-latency tax,
 * ``stall_free_frac``: fraction of decode steps with zero prompt work,
 * per-arrival admission-gate blocks (``Scheduler.lifetime_need``),
-* ``max_servable_prompt``: the longest prompt the gate admits at all.
+* ``max_servable_prompt``: the longest prompt the gate admits at all,
+* ``stall_tokens_total`` / ``stall_steps``: the scheduler's OWN stall
+  counters (``repro_sched_stall_*`` in the shared metrics registry,
+  ISSUE 7), asserted against an independent hand tally of the same
+  canonical rule -- the telemetry cannot drift from the simulation.
 
 Results go to ``BENCH_chunked_prefill.json``; the CI ``bench-smoke``
 job gates chunked p95 <= chunk budget < whole-prompt p95 and the gate/
@@ -90,9 +94,16 @@ def simulate(chunk) -> dict:
         sch.submit(r)
 
     stall_this_step = [0]
+    # independent tally of the scheduler's canonical stall rule, to
+    # assert the repro_sched_stall_* registry counters agree exactly
+    hand = dict(tokens=0, steps=0, call=0)
 
     def whole_prefill(seq, tokens):
         stall_this_step[0] += len(tokens) - seq.cached_len
+        # suffix tokens prefilled while >= 1 admitted decode is live
+        # (seq itself is not in sch.running yet at this point)
+        if any(not s.prefilling for s in sch.running):
+            hand["call"] += len(tokens) - seq.cached_len
         seq.length = len(tokens)
         seq.last_tok = 1
         if not seq.req.out:
@@ -115,7 +126,11 @@ def simulate(chunk) -> dict:
                 sch.submit(req)
         stall_this_step[0] = 0
         if chunk is None:
+            hand["call"] = 0
             sch.admit(whole_prefill)     # the whole prompt lands here
+            if hand["call"]:             # one stall step per admit() call
+                hand["tokens"] += hand["call"]
+                hand["steps"] += 1
             if sch.running:
                 sch.ensure_append_capacity()
                 for s in list(sch.running):
@@ -123,6 +138,12 @@ def simulate(chunk) -> dict:
         else:
             sch.admit_chunked()
             plan = sch.ensure_step_capacity(sch.plan_step())
+            # canonical rule: prompt tokens in the FINAL plan, counted
+            # when the plan also carries at least one decode
+            pre = sum(n for s, n in plan if s.prefilling)
+            if pre and any(not s.prefilling for s, _ in plan):
+                hand["tokens"] += pre
+                hand["steps"] += 1
             for s, n in plan:
                 if s.prefilling:
                     stall_this_step[0] += n
@@ -150,6 +171,13 @@ def simulate(chunk) -> dict:
     servable = max((ln for ln in range(1, MAX_LEN - 1)
                     if sch.lifetime_need(ln + ARRIVAL_NEW)
                     <= pool.n_usable), default=0)
+    # the registry's stall counters must equal the hand tally of the
+    # same rule -- ISSUE 7's telemetry-agreement gate
+    stall_tokens_total = int(pool.metrics.value("repro_sched_stall_tokens"))
+    stall_steps = int(pool.metrics.value("repro_sched_stall_steps"))
+    assert stall_tokens_total == hand["tokens"], \
+        (stall_tokens_total, hand["tokens"])
+    assert stall_steps == hand["steps"], (stall_steps, hand["steps"])
     stalls = stalls or [0]
     return dict(
         chunk_tokens=chunk,
@@ -162,6 +190,8 @@ def simulate(chunk) -> dict:
         max_servable_prompt=servable,
         preemptions=sch.n_preemptions,
         window_reclaimed=pool.report()["window_reclaimed"],
+        stall_tokens_total=stall_tokens_total,
+        stall_steps=stall_steps,
     )
 
 

@@ -21,10 +21,20 @@ The demo streams one request live through the async API -- a
 StreamHandle with an ``on_token`` callback printing tokens as they are
 emitted while the rest of the queue decodes alongside.
 
+``--metrics`` turns on the observability subsystem (ISSUE 7) for the
+quantized run: the engine is stepped manually with a live one-line
+stats bar (tokens/s, running/queued, pool occupancy, p50/p95
+inter-token latency straight from the registry histograms), the
+Prometheus snapshot is summarized at the end, and the per-request
+Perfetto timeline is dumped to ``--trace-out`` (open it in
+ui.perfetto.dev or chrome://tracing).
+
 Run:  PYTHONPATH=src python examples/serve_llm.py [--new-tokens 12]
                                                   [--paged]
                                                   [--block-size 16]
                                                   [--chunk-tokens 8]
+                                                  [--metrics]
+                                                  [--trace-out t.json]
 """
 
 import argparse
@@ -39,11 +49,27 @@ from repro.models.config import QuantConfig
 from repro.serving import engine as E
 
 
+def _stats_bar(eng, t0):
+    """One line of live serving stats, read straight off the registry."""
+    reg = eng.obs.registry
+    toks = reg.value("repro_engine_tokens")
+    dt = max(time.perf_counter() - t0, 1e-9)
+    itl = reg.get("repro_request_intertoken_seconds")
+    return (f"\r  [obs] {toks:4.0f} tok @ {toks / dt:6.1f} tok/s | "
+            f"run {reg.value('repro_engine_running'):2.0f} "
+            f"wait {reg.value('repro_engine_waiting'):2.0f} | "
+            f"pool {reg.value('repro_pool_occupancy') * 100:3.0f}% | "
+            f"itl p50 {itl.percentile(50) * 1e3:6.2f} ms "
+            f"p95 {itl.percentile(95) * 1e3:6.2f} ms")
+
+
 def serve(params, cfg, prompts, quant, new_tokens, *, paged=False,
-          block_size=16, chunk_tokens=None, stream_one=False):
+          block_size=16, chunk_tokens=None, stream_one=False,
+          metrics=False):
     eng = E.Engine(params, cfg, n_slots=4, max_len=128, quant=quant,
                    paged=paged, block_size=block_size,
-                   chunk_tokens=chunk_tokens)
+                   chunk_tokens=chunk_tokens,
+                   metrics=True if metrics else None)
     reqs = [E.Request(prompt=p, max_new_tokens=new_tokens) for p in prompts]
     if stream_one:
         # async API showcase: watch request 0's tokens arrive live while
@@ -52,10 +78,16 @@ def serve(params, cfg, prompts, quant, new_tokens, *, paged=False,
                                            flush=True)
     handles = [eng.submit(r) for r in reqs]
     t0 = time.perf_counter()
-    if stream_one:
-        for _ in handles[0].tokens():   # drive via the handle...
-            pass
-    eng.run()                           # ...then drain the rest
+    if metrics:
+        # manual step loop so the stats bar refreshes every step
+        while eng.step():
+            print(_stats_bar(eng, t0), end="", flush=True)
+        print()
+    else:
+        if stream_one:
+            for _ in handles[0].tokens():   # drive via the handle...
+                pass
+        eng.run()                           # ...then drain the rest
     dt = time.perf_counter() - t0
     total = sum(len(r.out) for r in reqs)
     return reqs, total / dt, eng
@@ -72,6 +104,11 @@ def main():
     ap.add_argument("--chunk-tokens", type=int, default=None,
                     help="chunked prefill budget per step (--paged): "
                          "prompts stream in fused with the decode batch")
+    ap.add_argument("--metrics", action="store_true",
+                    help="instrument the quantized run: live stats bar, "
+                         "Prometheus summary, Perfetto trace on exit")
+    ap.add_argument("--trace-out", default="serve_trace.json",
+                    help="Perfetto trace path (--metrics)")
     args = ap.parse_args()
 
     cfg = get_config("llama3-8b").reduced(
@@ -102,7 +139,9 @@ def main():
                                  args.new_tokens, paged=args.paged,
                                  block_size=args.block_size,
                                  chunk_tokens=args.chunk_tokens,
-                                 stream_one=args.paged)
+                                 stream_one=args.paged
+                                 and not args.metrics,
+                                 metrics=args.metrics)
 
     agree = np.mean([
         np.mean(np.asarray(a.out[:4]) == np.asarray(b.out[:4]))
@@ -128,6 +167,21 @@ def main():
             print(f"chunked prefill: {rep['chunk_tokens']} tokens/step "
                   f"budget, {rep['chunk_tokens_processed']} prompt tokens "
                   f"streamed through the step loop")
+    if args.metrics:
+        reg = eng_q.obs.registry
+        ttft = reg.get("repro_request_ttft_seconds")
+        eng_q.obs.tracer.validate_all()
+        eng_q.obs.tracer.export_json(args.trace_out)
+        print(f"metrics: {reg.value('repro_requests_submitted'):.0f} "
+              f"submitted, "
+              f"{reg.value('repro_requests_finished', reason='length'):.0f}"
+              f" finished(length), ttft p50 "
+              f"{ttft.percentile(50) * 1e3:.2f} ms p95 "
+              f"{ttft.percentile(95) * 1e3:.2f} ms over {ttft.count} "
+              f"requests")
+        n_ev = len(eng_q.obs.tracer.export()["traceEvents"])
+        print(f"perfetto timeline: {n_ev} events -> {args.trace_out} "
+              f"(open in ui.perfetto.dev)")
     assert all(r.done for r in reqs_bf + reqs_q)
     print("done.")
 

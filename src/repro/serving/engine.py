@@ -52,6 +52,19 @@ finishes the request with ``finish_reason='timeout'``), and
 cancellation releases blocks and state slots through the scheduler's
 refcount path mid-prefill or mid-decode.
 
+**Observability** (``metrics=...``, default off): the engine reports
+through a :class:`repro.obs.ServingObs` facade -- per-request lifecycle
+traces (queued/running/chunk_prefill/decode spans, token instants,
+TTFT/inter-token histograms, Perfetto export) plus step-loop gauges
+(batch lanes live vs padded, chunk-budget utilization, pool occupancy)
+in the SAME metrics registry the pool's and scheduler's counters live
+in, so ``report()``, ``registry.render()``, and the benchmarks can
+never disagree.  Every timestamp goes through the engine's injectable
+``clock`` (traces are deterministic under test), and the default is
+the no-op ``NULL_OBS`` sink: hooks cost one constant no-op call, no
+clock read, no allocation -- the hot path and token-identity are
+untouched when observability is off.
+
 Serving uses quantized packed weights (the paper's technique); pass
 ``quant=cfg.quant`` after :func:`repro.models.model.quantize_params`.
 """
@@ -69,6 +82,7 @@ import numpy as np
 
 from repro.models import model as M
 from repro.models.config import ModelConfig, QuantConfig
+from repro.obs import NULL_OBS, MetricsRegistry, ServingObs
 
 
 # ---------------------------------------------------------------------------
@@ -296,14 +310,36 @@ class Engine:
                  max_batch: Optional[int] = None,
                  prefix_cache: bool = True,
                  chunk_tokens: Optional[int] = None,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 metrics=None):
         self.params, self.cfg, self.quant = params, cfg, quant
         self.n_slots, self.max_len = n_slots, max_len
         self.paged = paged
         self.steps = 0
         self._seed_counter = 0      # default per-request sampling seeds
-        # deadline clock, injectable for deterministic timeout tests
+        # deadline clock, injectable for deterministic timeout tests;
+        # ALL observability timestamps route through it too (satellite
+        # of ISSUE 7), so a ServingObs built with its own test clock
+        # supplies the engine clock when none is injected here
+        if clock is None and isinstance(metrics, ServingObs):
+            clock = metrics.clock
         self._clock = clock or time.monotonic
+        # ``metrics``: None/False = off (NULL_OBS: no-op hooks, no clock
+        # reads, token-identical hot path); True = fresh ServingObs;
+        # or pass a MetricsRegistry / ServingObs to share a namespace
+        if metrics is None or metrics is False:
+            self.obs = NULL_OBS
+        elif isinstance(metrics, ServingObs):
+            self.obs = metrics
+            self.obs.clock = self._clock
+        elif isinstance(metrics, MetricsRegistry):
+            self.obs = ServingObs(registry=metrics, clock=self._clock)
+        elif metrics is True:
+            self.obs = ServingObs(clock=self._clock)
+        else:
+            raise TypeError(
+                f"metrics: expected None/bool/MetricsRegistry/"
+                f"ServingObs, got {type(metrics).__name__}")
         self._deadlines = False     # fast-path: no deadline submitted yet
         self.chunk_tokens_processed = 0
         if chunk_tokens is not None and not paged:
@@ -347,10 +383,13 @@ class Engine:
                 prefix_cache=(prefix_cache and cfg.family != "vlm"
                               and not stateful),
                 n_state_slots=self.max_batch if stateful else 0,
-                enc_len=enc)
+                # NULL_OBS.registry is None -> the pool keeps a private
+                # registry, so report() snapshots work with metrics off
+                enc_len=enc, metrics=self.obs.registry)
             self.scheduler = Scheduler(self.pool, max_len=max_len,
                                        max_batch=self.max_batch,
-                                       chunk_tokens=self.chunk_tokens)
+                                       chunk_tokens=self.chunk_tokens,
+                                       obs=self.obs)
             self.n_batch_blocks = max_len // block_size   # table width
         else:
             self.caches = M.init_caches(cfg, n_slots, max_len, quant=quant)
@@ -367,6 +406,9 @@ class Engine:
             req.deadline = self._clock() + req.timeout
         if getattr(req, "deadline", None) is not None:
             self._deadlines = True
+        # trace starts BEFORE scheduler.submit so an immediate
+        # rejection still closes a balanced span tree
+        self.obs.on_submit(req)
         if self.paged:
             self.scheduler.submit(req)
         else:
@@ -393,6 +435,7 @@ class Engine:
             else:
                 return False
         req.done, req.finish_reason = True, "cancelled"
+        self.obs.on_finish(req, "cancelled")
         return True
 
     def _expire(self) -> None:
@@ -417,16 +460,19 @@ class Engine:
         for req in [r for r in self.queue if expired(r)]:
             self.queue.remove(req)
             req.done, req.finish_reason = True, "timeout"
+            self.obs.on_finish(req, "timeout")
         for i, seq in enumerate(self.slot_req):
             if seq is not None and expired(seq.req):
                 self.slot_req[i] = None
                 seq.req.done, seq.req.finish_reason = True, "timeout"
+                self.obs.on_finish(seq.req, "timeout", seq=seq)
 
     def _emit(self, seq, tok: int) -> None:
         """Append an output token and fire ``on_token``: emission order
         == callback order, and a finished request (cancelled/expired by
         another lane's callback mid-step) never reaches here again."""
         seq.req.out.append(tok)
+        self.obs.on_token(seq.req, tok)
         cb = getattr(seq.req, "on_token", None)
         if cb is not None:
             cb(tok)
@@ -534,20 +580,31 @@ class Engine:
     # -- contiguous path ----------------------------------------------------
     def _prefill_into(self, req: Request, slot: int):
         from repro.serving.scheduler import SequenceState
+        obs = self.obs
+        seq = SequenceState(req=req, length=len(req.prompt))
+        obs.on_admit(seq, prefilling=True)
+        t0 = obs.t() if obs.enabled else 0.0
         logits, one = self._bucketed_prefill(req.prompt)
         self.caches = _tree_write_slot(self.caches, one, slot)
-        seq = SequenceState(req=req, length=len(req.prompt))
+        if obs.enabled:
+            obs.on_chunk(seq, len(req.prompt), t0, obs.t())
+        obs.on_decode_begin(seq)
         seq.last_tok = self._sample_token(
             np.asarray(logits[0], np.float32), seq)
         self._emit(seq, seq.last_tok)
         self.slot_req[slot] = seq
 
     def _contiguous_step(self) -> bool:
+        obs = self.obs
+        t0 = obs.t() if obs.enabled else 0.0
         self._expire()
         self._admit()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return False
+        if obs.enabled:
+            obs.on_dispatch(live=len(active), lanes=self.n_slots,
+                            tok_live=len(active), tok_lanes=self.n_slots)
         toks = np.zeros(self.n_slots, np.int32)
         pos = np.zeros(self.n_slots, np.int32)
         for slot, seq in enumerate(self.slot_req):
@@ -574,6 +631,11 @@ class Engine:
                 seq.req.done = True
                 seq.req.finish_reason = "length"
                 self.slot_req[slot] = None
+                self.obs.on_finish(seq.req, "length", seq=seq)
+        if obs.enabled:
+            obs.on_step(
+                t0, waiting=len(self.queue),
+                running=sum(r is not None for r in self.slot_req))
         return True
 
     # -- paged path ----------------------------------------------------------
@@ -653,6 +715,8 @@ class Engine:
 
     def _paged_step(self) -> bool:
         sch = self.scheduler
+        obs = self.obs
+        t0 = obs.t() if obs.enabled else 0.0
         self._expire()
         if self.chunk_tokens is None:
             # whole-prompt mode: admission prefills, the step decodes
@@ -666,8 +730,21 @@ class Engine:
             plan = sch.ensure_step_capacity(sch.plan_step())
             if not plan:
                 return False
+        chunk_used = 0
+        if obs.enabled and self.chunk_tokens is not None:
+            chunk_used = sum(n for s, n in plan if s.prefilling)
+        tf0 = obs.t() if obs.enabled else 0.0
         rows = self._forward_plan(plan)
-        self._advance(plan, rows)
+        tf1 = obs.t() if obs.enabled else 0.0
+        self._advance(plan, rows, tf0, tf1)
+        if obs.enabled:
+            self.pool.sync_gauges()
+            obs.on_step(
+                t0, running=len(sch.running), waiting=len(sch.waiting),
+                chunk_used=chunk_used, chunk_budget=self.chunk_tokens,
+                occupancy=(self.pool.used_blocks
+                           / max(self.pool.n_usable, 1)
+                           if self.pool.needs_blocks else None))
         return True
 
     def _forward_plan(self, plan) -> list:
@@ -713,6 +790,9 @@ class Engine:
         # O(window/block_size) however long the generation runs
         nb = min(_next_pow2(max(len(s.blocks) for s in running) or 1),
                  self.n_batch_blocks)
+        if self.obs.enabled:
+            self.obs.on_dispatch(live=len(running), lanes=bb,
+                                 tok_live=len(running), tok_lanes=bb)
         toks = np.zeros(bb, np.int32)
         pos = np.full(bb, -1, np.int32)       # pad lanes: masked everywhere
         lens = np.zeros(bb, np.int32)
@@ -753,6 +833,10 @@ class Engine:
         sq = prefill_bucket(smax, self.max_len)
         nb = min(_next_pow2(max(len(s.blocks) for s, _ in plan) or 1),
                  self.n_batch_blocks)
+        if self.obs.enabled:
+            self.obs.on_dispatch(live=len(plan), lanes=bb,
+                                 tok_live=sum(n for _, n in plan),
+                                 tok_lanes=bb * sq)
         toks = np.zeros((bb, sq), np.int32)
         pos = np.full((bb, sq), -1, np.int32)  # pads: masked everywhere
         last = np.zeros(bb, np.int32)
@@ -779,11 +863,15 @@ class Engine:
         logits = np.asarray(logits, np.float32)
         return [logits[i] for i in range(len(plan))]
 
-    def _advance(self, plan, rows) -> None:
+    def _advance(self, plan, rows, t_fwd0: float = 0.0,
+                 t_fwd1: float = 0.0) -> None:
         """Consume a step's logits: advance lengths, sample/emit decode
         tokens (and the first token of a request whose prefill just
-        completed), finish what is done."""
+        completed), finish what is done.  ``t_fwd0``/``t_fwd1`` bound
+        the step's forward pass (engine clock) -- each landed chunk is
+        traced as a closed ``chunk_prefill`` span over that window."""
         sch = self.scheduler
+        obs = self.obs
         self.steps += 1
         for (seq, n), row in zip(plan, rows):
             if seq.req.done:    # cancelled/expired by a callback mid-step
@@ -791,10 +879,13 @@ class Engine:
             if seq.prefilling:
                 seq.length += n
                 self.chunk_tokens_processed += n
+                if obs.enabled:
+                    obs.on_chunk(seq, n, t_fwd0, t_fwd1)
                 sch.register_progress(seq)
                 if seq.length < len(seq.pending):
                     continue                   # more chunks to stream
                 seq.pending = None
+                obs.on_decode_begin(seq)
                 if seq.req.out:
                     # warm resume: the pending input token is known
                     seq.last_tok = seq.req.out[-1]

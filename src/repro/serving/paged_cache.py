@@ -85,6 +85,15 @@ Invariants the pool maintains (see :meth:`validate`):
 * decode/prefill steps receive the pool with this batch's
   ``block_tables`` / ``length`` injected per layer (:meth:`step_caches`)
   and give updated pool leaves back through :meth:`absorb`.
+
+Telemetry.  Event counters (``repro_pool_*``: prefix hits/lookups, COW
+copies, evictions, window reclaims, chain-hash ops) live in a shared
+:class:`repro.obs.metrics.MetricsRegistry` (pass ``metrics=``; the pool
+otherwise keeps a private one).  The registry is the **source of
+truth**: the legacy ``n_cow``-style attributes are read-only properties
+over it and :meth:`report` is a snapshot of it, so the dict keys, the
+benchmark scripts, and a scraped ``registry.render()`` can never
+disagree (ROADMAP "Observability" contract).
 """
 
 from __future__ import annotations
@@ -100,6 +109,7 @@ import numpy as np
 
 from repro.models import model as M
 from repro.models.config import ModelConfig, QuantConfig, effective_kv_bits
+from repro.obs.metrics import MetricsRegistry
 
 _KV_KEYS = ("k", "v", "k_scale", "v_scale", "pos")
 
@@ -282,7 +292,8 @@ class PagedKVPool:
     def __init__(self, cfg: ModelConfig, n_blocks: int, block_size: int,
                  quant: Optional[QuantConfig] = None, *,
                  prefix_cache: bool = True, n_state_slots: int = 0,
-                 enc_len: Optional[int] = None):
+                 enc_len: Optional[int] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         assert supports_paging(cfg), \
             f"no pageable KV stream or slottable state for {cfg.family!r}"
         kv_bits = effective_kv_bits(cfg, quant)
@@ -332,19 +343,79 @@ class PagedKVPool:
         # prefix-lookup outcome; lets the scheduler memoize a failed
         # admission probe instead of re-walking the head's chain per step
         self.version = 0
-        # prefix-cache accounting
-        self.n_prefix_hits = 0
-        self.n_hit_tokens = 0
-        self.n_lookups = 0
-        self.n_lookup_tokens = 0
-        self.n_cow = 0
-        self.n_evictions = 0
-        self.n_window_reclaimed = 0     # out-of-window blocks returned
+        # event accounting lives in the metrics registry (ISSUE 7: one
+        # namespace shared with the scheduler and engine -- report()
+        # and the legacy ``n_*`` attributes below are snapshots of it).
+        # A standalone pool gets a private registry; the engine passes
+        # its own so everything scrapes in one render()
+        self.metrics = metrics if metrics is not None \
+            else MetricsRegistry()
+        m = self.metrics
+        self._c_prefix_hits = m.counter(
+            "repro_pool_prefix_hits",
+            "committed admissions that reused >= 1 cached prefix block")
+        self._c_hit_tokens = m.counter(
+            "repro_pool_prefix_hit_tokens",
+            "prompt tokens served from resident prefix blocks")
+        self._c_lookups = m.counter(
+            "repro_pool_prefix_lookups",
+            "committed admissions probed against the prefix index")
+        self._c_lookup_tokens = m.counter(
+            "repro_pool_prefix_lookup_tokens",
+            "prompt tokens of committed admissions")
+        self._c_cow = m.counter(
+            "repro_pool_cow", "copy-on-write block copies")
+        self._c_evictions = m.counter(
+            "repro_pool_evictions",
+            "LRU-cached blocks evicted under allocation pressure")
+        self._c_window = m.counter(
+            "repro_pool_window_reclaimed",
+            "out-of-window blocks returned to the pool (SWA reclaim)")
         # block-chunk hashes computed by register_chain (the ChainMemo
         # resume point keeps this O(new blocks) per call, not O(chain))
-        self.n_chain_hash_ops = 0
+        self._c_chain_ops = m.counter(
+            "repro_pool_chain_hash_ops",
+            "block-chunk hashes computed by register_chain")
+        self._g_blocks = m.gauge(
+            "repro_pool_blocks", "pool blocks by state",
+            labelnames=("state",))
 
     # -- accounting ----------------------------------------------------------
+    # Legacy counter attributes, preserved as registry snapshots: the
+    # registry is the single source of truth (satellite of ISSUE 7),
+    # these views keep the PR 2-6 test/benchmark surface exact.
+    @property
+    def n_prefix_hits(self) -> int:
+        return int(self._c_prefix_hits.value)
+
+    @property
+    def n_hit_tokens(self) -> int:
+        return int(self._c_hit_tokens.value)
+
+    @property
+    def n_lookups(self) -> int:
+        return int(self._c_lookups.value)
+
+    @property
+    def n_lookup_tokens(self) -> int:
+        return int(self._c_lookup_tokens.value)
+
+    @property
+    def n_cow(self) -> int:
+        return int(self._c_cow.value)
+
+    @property
+    def n_evictions(self) -> int:
+        return int(self._c_evictions.value)
+
+    @property
+    def n_window_reclaimed(self) -> int:
+        return int(self._c_window.value)
+
+    @property
+    def n_chain_hash_ops(self) -> int:
+        return int(self._c_chain_ops.value)
+
     @property
     def n_usable(self) -> int:
         return self.n_blocks - 1
@@ -382,8 +453,14 @@ class PagedKVPool:
         ``tokens_resident``: total tokens currently cached across
         requests (the scheduler knows; the pool only sees blocks).
         Internal fragmentation = allocated-but-empty token slots as a
-        fraction of allocated slots."""
+        fraction of allocated slots.
+
+        Every event-counter key is read back from the metrics registry
+        (the pool increments registry counters directly), so this dict
+        is a *snapshot* of the shared namespace and can never drift
+        from a scraped ``registry.render()``."""
         from repro.serving.engine import kv_cache_bytes
+        self.sync_gauges()
         pool_bytes = kv_cache_bytes(self.caches)
         payload = kv_cache_bytes(self.caches, payload_only=True)
         slots = self.used_blocks * self.block_size
@@ -417,6 +494,15 @@ class PagedKVPool:
                 1.0 - tokens_resident / slots if slots else 0.0)
         return rep
 
+    def sync_gauges(self) -> None:
+        """Refresh the registry's block-state gauges from the live
+        pool structure (called by :meth:`report` and the engine's
+        per-step hook; gauges are derived state, counters are not)."""
+        self._g_blocks.labels(state="free").set(len(self._free))
+        self._g_blocks.labels(state="used").set(self.used_blocks)
+        self._g_blocks.labels(state="cached").set(self.cached_blocks)
+        self._g_blocks.labels(state="shared").set(self.shared_blocks)
+
     # -- alloc / free --------------------------------------------------------
     def alloc(self, n: int) -> list:
         """Take ``n`` blocks at refcount 1 with positions reset to -1.
@@ -435,7 +521,7 @@ class PagedKVPool:
                 self._unregister(victim)
                 del self._ref[victim]
                 self._free.append(victim)
-                self.n_evictions += 1
+                self._c_evictions.inc()
             bid = self._free.pop()
             self._ref[bid] = 1
             ids.append(bid)
@@ -511,7 +597,7 @@ class PagedKVPool:
             if self._ref[bid] > 0:
                 continue
             if window_reclaim:
-                self.n_window_reclaimed += 1
+                self._c_window.inc()
             if self.prefix_cache and bid in self._meta:
                 self._lru[bid] = None          # MRU end
             else:
@@ -534,7 +620,7 @@ class PagedKVPool:
                 else:
                     c[key] = c[key].at[idx_new].set(c[key][idx_old])
         self.release([bid])
-        self.n_cow += 1
+        self._c_cow.inc()
         return new
 
     def _destroy(self, bid: int) -> None:
@@ -600,11 +686,11 @@ class PagedKVPool:
         lookup per admitted request.  Probes that failed the capacity
         gate and released their blocks must not inflate the counters
         that reports and benchmarks divide by prompt tokens."""
-        self.n_lookups += 1
-        self.n_lookup_tokens += int(n_tokens)
+        self._c_lookups.inc()
+        self._c_lookup_tokens.inc(int(n_tokens))
         if hit.ids:
-            self.n_prefix_hits += 1
-            self.n_hit_tokens += hit.cached_len
+            self._c_prefix_hits.inc()
+            self._c_hit_tokens.inc(hit.cached_len)
 
     def register_chain(self, tokens, block_ids,
                        memo: Optional[ChainMemo] = None) -> None:
@@ -636,7 +722,7 @@ class PagedKVPool:
             chunk = tuple(int(t) for t in tokens[lo:lo + bs])
             if not chunk:
                 break
-            self.n_chain_hash_ops += 1
+            self._c_chain_ops.inc()
             meta = _BlockMeta(prefix_hash=h, start=lo, tokens=chunk)
             if len(chunk) == bs:
                 key = meta.key

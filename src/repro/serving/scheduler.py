@@ -68,6 +68,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.obs import NULL_OBS
 from repro.serving.paged_cache import ChainMemo, PagedKVPool
 
 
@@ -148,21 +149,51 @@ class Scheduler:
     """
 
     def __init__(self, pool: PagedKVPool, *, max_len: int, max_batch: int,
-                 chunk_tokens: Optional[int] = None):
+                 chunk_tokens: Optional[int] = None, obs=None):
         assert chunk_tokens is None or chunk_tokens >= 1, chunk_tokens
         self.pool = pool
         self.max_len, self.max_batch = max_len, max_batch
         self.chunk_tokens = chunk_tokens
         self.waiting: deque = deque()      # of engine.Request
         self.running: list[SequenceState] = []
-        self.n_preemptions = 0
-        self.n_rejections = 0
+        # lifecycle tracing facade (the engine passes its ServingObs;
+        # a standalone scheduler runs against the no-op twin) and the
+        # scheduler's slice of the shared metrics namespace -- event
+        # counters live in the POOL's registry so one render() scrapes
+        # the whole serving stack
+        self.obs = obs if obs is not None else NULL_OBS
+        m = pool.metrics
+        self._c_preemptions = m.counter(
+            "repro_sched_preemptions",
+            "running requests evicted to free pool blocks")
+        self._c_rejections = m.counter(
+            "repro_sched_rejections",
+            "requests rejected at submit (impossible to serve)")
+        self._c_admissions = m.counter(
+            "repro_sched_admissions", "requests admitted to running")
+        self._c_stall_tokens = m.counter(
+            "repro_sched_stall_tokens",
+            "prompt tokens co-scheduled with >= 1 running decode (the "
+            "per-step decode-latency tax)")
+        self._c_stall_steps = m.counter(
+            "repro_sched_stall_steps",
+            "steps that co-scheduled prompt work with a running decode")
         self._admit_counter = 0
         # (head request, pool.version) of the last admission probe that
         # failed the capacity gate: while neither changes, re-probing
         # would re-walk the head's whole chain (hashing + refcount
         # churn) every engine step just to fail again
         self._blocked_head = None
+
+    # legacy counter attributes: snapshots of the shared registry (the
+    # registry is the source of truth, same rule as the pool's n_*)
+    @property
+    def n_preemptions(self) -> int:
+        return int(self._c_preemptions.value)
+
+    @property
+    def n_rejections(self) -> int:
+        return int(self._c_rejections.value)
 
     # -- submission ----------------------------------------------------------
     def submit(self, req) -> None:
@@ -209,7 +240,8 @@ class Scheduler:
         req.error = f"rejected: {reason}"
         req.done = True
         req.finish_reason = "rejected"
-        self.n_rejections += 1
+        self._c_rejections.inc()
+        self.obs.on_finish(req, "rejected")
 
     # -- admission -----------------------------------------------------------
     def admit(self, prefill_fn) -> None:
@@ -222,6 +254,7 @@ class Scheduler:
         resident) and fills ``seq.length``/``seq.last_tok``; afterwards
         the full chain is registered in the prefix index so the *next*
         same-prefix request hits it."""
+        stall = 0     # prompt tokens prefilled while decodes were live
         while self.waiting and len(self.running) < self.max_batch:
             req = self.waiting[0]
             if self.pool.slots is not None \
@@ -266,13 +299,31 @@ class Scheduler:
             self.pool.record_hit(hit, len(tokens))
             seq.admitted_at = self._admit_counter
             self._admit_counter += 1
+            self._c_admissions.inc()
+            # whole-prompt admission stalls every running decode for
+            # the entire suffix -- the O(prompt) tax chunked prefill
+            # bounds (same stall definition either way: prompt tokens
+            # co-scheduled with >= 1 running decode)
+            if any(not s.prefilling for s in self.running):
+                stall += len(tokens) - seq.cached_len
+            obs = self.obs
+            obs.on_admit(seq, cached_tokens=seq.cached_len,
+                         prefilling=True)
+            t0 = obs.t() if obs.enabled else 0.0
             prefill_fn(seq, tokens)
+            if obs.enabled:
+                obs.on_chunk(seq, len(tokens) - seq.cached_len,
+                             t0, obs.t())
+            obs.on_decode_begin(seq)
             self.pool.register_chain(tokens, seq.blocks,
                                      memo=seq.chain_memo)
             # a long prompt's leading blocks may already be fully out of
             # the attention window: return them before decode starts
             self._reclaim_seq(seq)
             self.running.append(seq)
+        if stall:
+            self._c_stall_tokens.inc(stall)
+            self._c_stall_steps.inc()
 
     def admit_chunked(self) -> None:
         """FCFS *chunked* admission: acquire the prefix-cache hit and a
@@ -319,6 +370,11 @@ class Scheduler:
             self.pool.record_hit(hit, len(tokens))
             seq.admitted_at = self._admit_counter
             self._admit_counter += 1
+            self._c_admissions.inc()
+            self.obs.on_admit(seq, cached_tokens=seq.cached_len,
+                              prefilling=seq.prefilling)
+            if not seq.prefilling:
+                self.obs.on_decode_begin(seq)
             self.running.append(seq)
 
     # -- chunked step planning -----------------------------------------------
@@ -443,6 +499,15 @@ class Scheduler:
             j = seq.length // self.pool.block_size - seq.freed_prefix
             if self.pool.refcount(seq.blocks[j]) > 1:
                 seq.blocks[j] = self.pool.cow(seq.blocks[j])
+        # the step's decode-stall metric, recorded on the FINAL plan
+        # (post-preemption): prompt tokens this step co-schedules with
+        # at least one running decode.  This is the canonical stall
+        # definition -- benchmarks/chunked_prefill.py asserts its own
+        # hand count equals these counters
+        stall = sum(n for s, n in plan if s.prefilling)
+        if stall and any(not s.prefilling for s, _ in plan):
+            self._c_stall_tokens.inc(stall)
+            self._c_stall_steps.inc()
         return plan
 
     def _release_seq(self, seq: SequenceState) -> None:
@@ -470,7 +535,8 @@ class Scheduler:
         self._release_seq(seq)
         self.running.remove(seq)
         self.waiting.appendleft(seq.req)
-        self.n_preemptions += 1
+        self._c_preemptions.inc()
+        self.obs.on_preempt(seq)
 
     def register_progress(self, seq: SequenceState) -> None:
         """Index the blocks a freshly landed chunk filled in the prefix
@@ -488,6 +554,7 @@ class Scheduler:
         self.running.remove(seq)
         seq.req.done = True
         seq.req.finish_reason = reason
+        self.obs.on_finish(seq.req, reason, seq=seq)
 
     def cancel(self, req, reason: str = "cancelled") -> bool:
         """Abort ``req`` wherever it lives.  A running request --
@@ -495,10 +562,12 @@ class Scheduler:
         state slot through the refcount path (the zero-leak property
         the harness asserts); a waiting request just leaves the queue.
         Returns False for unknown (or already finished) requests."""
+        found = None
         for seq in self.running:
             if seq.req is req:
                 self._release_seq(seq)
                 self.running.remove(seq)
+                found = seq
                 break
         else:
             try:
@@ -507,6 +576,7 @@ class Scheduler:
                 return False
         req.done = True
         req.finish_reason = reason
+        self.obs.on_finish(req, reason, seq=found)
         return True
 
     @property

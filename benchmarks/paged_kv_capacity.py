@@ -222,9 +222,14 @@ def run_swa_reclaim(windows=(8, 16, 32), *, block_size=4, max_len=128,
             gen_tokens=gen_tokens, final_length=length,
             peak_blocks_per_request=peak,
             steady_blocks_per_request=steady,
+            # sub-block tail compaction pre-seeds the next append block
+            # while releasing the straddler, shaving the +1 write-target
+            # block off the rolling-table steady state
             bound_blocks_per_request=window // block_size + 1,
+            compacted_bound_blocks_per_request=window // block_size,
             unreclaimed_blocks_per_request=-(-length // block_size),
             window_reclaimed=pool.report()["window_reclaimed"],
+            tail_compactions=int(sch._c_compactions.value),
             preemptions=sch.n_preemptions,
         ))
     return rows
@@ -245,7 +250,7 @@ def table(rows: list) -> str:
 
 def swa_table(rows: list) -> str:
     hdr = ("| window | steady blk/req | bound | peak | unreclaimed "
-           "| reclaims |\n|---|---|---|---|---|---|\n")
+           "| reclaims | compactions |\n|---|---|---|---|---|---|---|\n")
     out = []
     for r in rows:
         out.append(
@@ -253,7 +258,7 @@ def swa_table(rows: list) -> str:
             f"{r['bound_blocks_per_request']} | "
             f"{r['peak_blocks_per_request']} | "
             f"{r['unreclaimed_blocks_per_request']} | "
-            f"{r['window_reclaimed']} |")
+            f"{r['window_reclaimed']} | {r['tail_compactions']} |")
     return hdr + "\n".join(out) + "\n"
 
 

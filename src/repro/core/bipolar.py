@@ -80,9 +80,16 @@ def quantize_values(x: jax.Array, n_bits: int, scale: jax.Array) -> jax.Array:
 
 def absmax_scale(x: jax.Array, n_bits: int, axis=None, keepdims=True,
                  eps: float = 1e-8) -> jax.Array:
-    """Symmetric absmax scale so that absmax maps to +-(2^n - 1)."""
+    """Symmetric absmax scale so that absmax maps to +-(2^n - 1).
+
+    Written as a reciprocal multiply, not a divide: XLA folds a
+    constant-divisor divide into exactly this multiply when compiling,
+    while eager mode executes a true division -- the explicit multiply
+    is the one form that produces identical bits in every compilation
+    context, which the bit-exact parity contracts between kernel impls
+    rely on."""
     amax = jnp.max(jnp.abs(x), axis=axis, keepdims=keepdims)
-    return jnp.maximum(amax, eps) / max_value(n_bits)
+    return jnp.maximum(amax, eps) * (1.0 / max_value(n_bits))
 
 
 def mse_scale(x: jax.Array, n_bits: int, axis=-1, *,

@@ -30,6 +30,17 @@ tests/kernels/test_parity.py.  Ops covered:
   a dual-GEMM gate/up mode (``w2``: SwiGLU's two projections share one
   A-tile stream, ``act(x@w1^T) * (x@w2^T)``).  Bit-identical to the
   composed unfused pipeline (tests/kernels/test_fused_linear.py);
+* ``ap_moe_expert_linear`` -- grouped MoE expert linear ``(E, C, K) x
+  (E, N, K) -> (E, C, N)``: ONE launch for all experts over an
+  ``(expert*group, row-tile, col-tile, k-tile)`` grid, per-(expert,
+  group) live-row counts riding scalar prefetch, ``pl.when`` skipping
+  row tiles whose capacity slots hold no routed token, and the fused
+  quantize prologue / dequant epilogue of ``ap_linear_fused`` batched
+  per expert (dual gate/up mode included).  Live rows are bit-identical
+  to ``layers._expert_matmul``; dead capacity rows are exact zeros.
+  ``with_stats=True`` additionally returns the kernel's live-tile map
+  (the interpret-mode skip proof and the BENCH_moe skipped-tile
+  fraction);
 * the bipolar KV-cache path ``quantize_kv`` / ``dequantize_kv`` /
   ``kv_cache_attention`` (dequant-on-read flash attention) /
   ``paged_kv_cache_attention`` (same, reading K/V through a serving
@@ -54,6 +65,7 @@ from repro.core import bipolar
 from repro.core.bipolar import BipolarTensor
 from repro.kernels import apmm as apmm_kernel
 from repro.kernels import flash_attention as flash_kernel
+from repro.kernels import moe as moe_kernel
 from repro.kernels import pack as pack_kernel
 from repro.kernels import ref
 
@@ -312,6 +324,110 @@ def ap_linear_fused(x: jax.Array, w: BipolarTensor, *, a_bits: int,
         variant=variant, act=act, block=(bm, bn, bk), out_dtype=out_dtype,
         interpret=(impl == "interpret"), **kw_args)
     return y[:m, :n].reshape(*lead, n)
+
+
+def ap_moe_expert_linear(x: jax.Array, w: BipolarTensor, *,
+                         counts: jax.Array, a_bits: int,
+                         w2: BipolarTensor | None = None,
+                         act: str = "none", variant: str = "fused",
+                         impl: str | None = None, out_dtype=None,
+                         with_stats: bool = False):
+    """Grouped quantized MoE expert linear (one launch for all experts).
+
+    ``y (E, C, N) = epi(Q(x) (E, C, K) @ W (E, N, K)^T)`` where ``C =
+    G * seg`` capacity rows per expert hold ``G`` dispatch-group
+    segments whose live tokens form a prefix of length ``counts[e, g]``
+    (``counts (E, G)`` int32, the one-hot-cumsum keep counts of
+    ``moe_apply``'s capacity dispatch).  Per segment:
+
+    * rows ``< counts[e, g]`` are **bit-identical** to the legacy
+      batched ``layers._expert_matmul`` path -- activations are
+      quantized per row in f32 from the materialized input (the
+      single-rounding chain of ``_expert_quantize``) and the epilogue
+      composes in f32 with one cast at the output write, matching the
+      legacy composition's cast point.  The op pins its operand and
+      result materialization (``lax.optimization_barrier`` on the
+      reference dataflow; the pallas call boundary pins physically), so
+      the bit pattern cannot drift with the surrounding jit graph;
+    * rows ``>= counts[e, g]`` are **exact zeros** in every impl (the
+      legacy path leaves tiny eps-scale values in dead capacity rows;
+      the combine gather reads neither, so rewiring is token-identical).
+
+    ``w2`` enables the dual gate/up mode: one quantized A-tile stream
+    against both expert weights, ``act(Y1) * Y2`` fused before the
+    output write (SwiGLU: w = gate, w2 = up -- the convention of
+    ``mlp_apply``).  The pallas/interpret impls run
+    :func:`repro.kernels.moe.moe_expert_linear`: counts ride scalar
+    prefetch and ``pl.when`` skips the quantize prologue and every MXU
+    pass of row tiles holding no live token.  ``with_stats=True``
+    additionally returns the ``(E*G, n_row_tiles)`` int32 live-tile map
+    (kernel-reported for pallas/interpret, analytic for reference --
+    the interpret parity test asserting they agree is the skip-path
+    proof).
+    """
+    impl = impl or default_impl()
+    out_dtype = out_dtype or x.dtype
+    e, c, k = x.shape
+    g = counts.shape[1]
+    assert c % g == 0, (c, g)
+    seg = c // g
+    n = w.shape[1]
+    assert w.shape == (e, n, k), (x.shape, w.shape)
+    if w2 is not None:
+        assert w2.shape == w.shape and w2.n_bits == w.n_bits, \
+            (w.shape, w2.shape)
+    counts = counts.astype(jnp.int32)
+    # pin the operand materialization: the kernel reads x from HBM in
+    # its storage dtype, so the reference dataflow must quantize the
+    # SAME rounded values -- the barrier stops XLA from feeding it the
+    # pre-cast excess-precision f32 upstream value instead
+    x = jax.lax.optimization_barrier(x)
+    # per-row absmax scale in f32 -- exactly _expert_quantize's chain
+    a_scale = bipolar.absmax_scale(x.astype(jnp.float32), a_bits,
+                                   axis=-1, keepdims=True)
+    # tile geometry shared by all impls so the live map is comparable
+    bc = min(apmm_kernel.DEFAULT_BM, _round_up(seg, 8))
+    n_ci = _round_up(seg, bc) // bc
+    if impl == "reference":
+        # result barrier = the kernel's HBM write: downstream consumers
+        # (the next GEMM's quantizer, the combine) see materialized
+        # out_dtype bits, never the fused f32 intermediate
+        y = jax.lax.optimization_barrier(ref.ap_moe_expert_linear_ref(
+            x, a_scale, counts, w, w2=w2, a_bits=a_bits, variant=variant,
+            act=act, out_dtype=out_dtype))
+        if with_stats:
+            live = (counts.reshape(e * g, 1)
+                    > jnp.arange(n_ci, dtype=jnp.int32)[None, :] * bc)
+            return y, live.astype(jnp.int32)
+        return y
+    # --- pad to tile multiples (kernel masks the K pad in-prologue) -----
+    wp = w.packed
+    w2p = w2.packed if w2 is not None else None
+    kw = max(bipolar.packed_words(k), wp.shape[-1],
+             w2p.shape[-1] if w2p is not None else 0)
+    bn = min(apmm_kernel.DEFAULT_BN, _round_up(n, 128))
+    np_ = _round_up(n, bn)
+    kp0 = kw * bipolar.PACK_WIDTH
+    bk = min(apmm_kernel.DEFAULT_BK, _round_up(kp0, 32))
+    kp = _round_up(kp0, bk)
+    cp = n_ci * bc
+    xg = _pad_dim(_pad_dim(x.reshape(e * g, seg, k), 2, kp), 1, cp)
+    sg = _pad_dim(a_scale.reshape(e * g, seg, 1), 1, cp, 1.0)
+    wp = _pad_dim(_pad_dim(wp, 2, np_), 3, kp // 32, 0xFFFFFFFF)
+    ws = _pad_dim(w.scale.reshape(e, 1, n).astype(jnp.float32), 2, np_, 1.0)
+    kw_args: dict = {}
+    if w2p is not None:
+        kw_args["wp2"] = _pad_dim(_pad_dim(w2p, 2, np_), 3, kp // 32,
+                                  0xFFFFFFFF)
+        kw_args["w2_scale"] = _pad_dim(
+            w2.scale.reshape(e, 1, n).astype(jnp.float32), 2, np_, 1.0)
+    y, live = moe_kernel.moe_expert_linear(
+        xg, sg, counts.reshape(e * g), wp, ws,
+        n_a=a_bits, n_b=w.n_bits, k_orig=k, n_groups=g, variant=variant,
+        act=act, block=(bc, bn, bk), out_dtype=out_dtype,
+        interpret=(impl == "interpret"), **kw_args)
+    y = y[:, :seg, :n].reshape(e, c, n)
+    return (y, live) if with_stats else y
 
 
 def pack_weight(w: jax.Array, n_bits: int, *,

@@ -228,6 +228,90 @@ def ap_linear_fused_ref(x2: jax.Array, a_scale: jax.Array,
     return yo
 
 
+_EB = (((2,), (2,)), ((0,), (0,)))  # batch experts, contract last dims
+
+
+def _moe_expert_int_core(q: jax.Array, w: BipolarTensor, n_a: int,
+                         variant: str) -> jax.Array:
+    """Exact int32 batched expert NT GEMM ``(E, C, K) x (E, N, K) ->
+    (E, C, N)`` of quantized activation *values* against packed expert
+    weights, K-pad corrected.
+
+    The lean twin of the grouped kernel's dataflow: weight planes stay
+    uint8 out of :func:`bipolar.unpack_planes` and are recombined
+    per plane group straight to int8 MXU operands -- the int32 value
+    tensor ``(E, N, Kp)`` that ``layers._expert_matmul`` materializes
+    never exists (4x less dot-operand traffic, which is what the
+    BENCH_moe HLO census measures)."""
+    e, c, k = q.shape
+    kp = w.packed.shape[-1] * bipolar.PACK_WIDTH
+    planes = bipolar.unpack_planes(w.packed, -1, kp)   # (n_b, E, N, Kp) u8
+    if kp > k:   # activation pad columns: all-zero bits = -maxa
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, kp - k)),
+                    constant_values=-bipolar.max_value(n_a))
+    ua = bipolar.encode(q, n_a)
+    n_b = w.n_bits
+    y = None
+    if variant == "fused":
+        for lo_a, sz_a in plane_groups(n_a):
+            va = ((((ua >> lo_a) & ((1 << sz_a) - 1)) << 1)
+                  - ((1 << sz_a) - 1)).astype(jnp.int8)
+            for lo_b, sz_b in plane_groups(n_b):
+                acc = planes[lo_b].astype(jnp.int16) << 1
+                for i in range(lo_b + 1, lo_b + sz_b):
+                    acc = acc + (planes[i].astype(jnp.int16)
+                                 << (i - lo_b + 1))
+                vb = (acc - bipolar.max_value(sz_b)).astype(jnp.int8)
+                yij = jax.lax.dot_general(
+                    va, vb, _EB, preferred_element_type=jnp.int32)
+                yij = yij << (lo_a + lo_b)
+                y = yij if y is None else y + yij
+    else:
+        for i in range(n_a):
+            a8 = ((((ua >> i) & 1) << 1) - 1).astype(jnp.int8)
+            for j in range(n_b):
+                b8 = 2 * planes[j].astype(jnp.int8) - 1
+                yij = jax.lax.dot_general(
+                    a8, b8, _EB, preferred_element_type=jnp.int32)
+                yij = yij << (i + j)
+                y = yij if y is None else y + yij
+    return y + (kp - k) * bipolar.max_value(n_a) * bipolar.max_value(n_b)
+
+
+def ap_moe_expert_linear_ref(x: jax.Array, a_scale: jax.Array,
+                             counts: jax.Array, w: BipolarTensor, *,
+                             w2=None, a_bits: int, variant: str = "fused",
+                             act: str = "none",
+                             out_dtype=None) -> jax.Array:
+    """Reference grouped expert linear (see ops.ap_moe_expert_linear).
+
+    Quantizes the dispatched activations in f32 (the single-rounding
+    chain of ``layers._expert_quantize``), runs the lean int core per
+    weight operand, and composes the epilogue in f32 with ONE cast to
+    the output dtype -- the same cast point as the legacy f32
+    composition in ``moe_apply``, so live rows are bit-identical to
+    ``_expert_matmul``; rows at/after a group's live count are exactly
+    zero."""
+    od = out_dtype if out_dtype is not None else x.dtype
+    q = bipolar.quantize_values(x.astype(jnp.float32), a_bits, a_scale)
+    a_s = a_scale                                      # (E, C, 1) f32
+    yf = _moe_expert_int_core(q, w, a_bits, variant).astype(jnp.float32) \
+        * a_s * w.scale[:, None, :, 0]
+    if w2 is not None:
+        y2 = _moe_expert_int_core(q, w2, a_bits, variant) \
+            .astype(jnp.float32) * a_s * w2.scale[:, None, :, 0]
+        yf = apply_act(yf, act) * y2
+    elif act != "none":
+        yf = apply_act(yf, act)
+    yo = yf.astype(od)
+    e, c, _ = x.shape
+    seg = c // counts.shape[1]
+    off = jnp.arange(c, dtype=jnp.int32) % seg
+    grp = jnp.arange(c) // seg
+    live = off[None, :] < counts[:, grp]               # (E, C)
+    return jnp.where(live[..., None], yo, jnp.zeros((), od))
+
+
 def apmm_dequant_ref(a: BipolarTensor, b: BipolarTensor,
                      fused: bool = True,
                      out_dtype=jnp.float32) -> jax.Array:

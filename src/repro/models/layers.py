@@ -677,13 +677,22 @@ def _expert_quantize(x_eck, a_bits: int):
     """Per-(expert, row) activation quantization for the expert GEMMs:
     computed ONCE and shared by the gate and up projections (the
     reference-dataflow analogue of the fused kernel's single A-tile
-    stream)."""
+    stream).
+
+    The scale/divide/round chain runs in f32 (single rounding from the
+    materialized input).  A native-bf16 chain is NOT compilation-stable:
+    XLA's excess-precision pass elides the f32->bf16->f32 converts
+    between consecutive bf16 ops inside a fused graph, so the rounded
+    integers depend on the surrounding jit context -- the f32 chain has
+    no narrowing converts to elide, which is what keeps the legacy path
+    bit-identical to the grouped kernel under every compilation."""
     from repro.core import bipolar as bp
-    sx = bp.absmax_scale(x_eck, a_bits, axis=-1)          # (E, C, 1)
-    return bp.quantize_values(x_eck, a_bits, sx), sx      # (E, C, K) int32
+    xf = x_eck.astype(jnp.float32)
+    sx = bp.absmax_scale(xf, a_bits, axis=-1)             # (E, C, 1) f32
+    return bp.quantize_values(xf, a_bits, sx), sx         # (E, C, K) int32
 
 
-def _expert_matmul(w, x_eck, quant=None, pre=None):
+def _expert_matmul(w, x_eck, quant=None, pre=None, out_dtype=None):
     """Batched per-expert NT GEMM: ``(E, C, K) x (E, N, K) -> (E, C, N)``.
 
     When ``w`` is a :class:`BipolarTensor` (packed ``(n, E, N, Kw)``, scale
@@ -692,8 +701,11 @@ def _expert_matmul(w, x_eck, quant=None, pre=None):
     quantize activations per (e, c) row (or reuse ``pre`` = the shared
     ``_expert_quantize`` result), integer einsum, closed-form K-pad
     correction, scale outer product.  Bit-exact with the 2D APMM path.
+    ``out_dtype`` overrides the output cast (``jnp.float32`` = hand the
+    undegraded f32 dequant to a fused epilogue, the dual-GEMM pattern).
     """
     from repro.core import bipolar as bp
+    od = out_dtype if out_dtype is not None else x_eck.dtype
     if isinstance(w, BipolarTensor):
         kp = w.packed.shape[-1] * bp.PACK_WIDTH
         k = w.shape[-1]
@@ -708,11 +720,16 @@ def _expert_matmul(w, x_eck, quant=None, pre=None):
                        preferred_element_type=jnp.int32)
         y = y + (kp - k) * bp.max_value(quant.a_bits) * bp.max_value(w.n_bits)
         y = y.astype(jnp.float32) * sx * w.scale[:, None, :, 0]
-        return y.astype(x_eck.dtype)
-    return jnp.einsum("eck,enk->ecn", x_eck, w.astype(x_eck.dtype))
+        return y.astype(od)
+    return jnp.einsum("eck,enk->ecn", x_eck, w.astype(x_eck.dtype)).astype(od)
 
 
 MOE_DISPATCH_GROUPS = 32   # static token-group count (per-group capacity)
+
+# Module flag: False forces the legacy batched-over-E expert path even for
+# quantized weights -- the pre-rewire oracle for the engine token-identity
+# test and the BENCH_moe baseline.  The grouped kernel is the default.
+GROUPED_MOE = True
 
 
 def moe_apply(params: dict, x: jax.Array, cfg: ModelConfig, quant=None):
@@ -724,7 +741,20 @@ def moe_apply(params: dict, x: jax.Array, cfg: ModelConfig, quant=None):
     partitions along the group axis -- the flat global scatter was
     "involuntarily replicated" by XLA, costing ~1.4 TiB of all-reduce per
     MoE layer on the jamba-398B train cell (EXPERIMENTS.md §Perf iter 3).
-    Memory is O(G * E * C_g * d) = O(k*T*cf*d); returns ``(y, aux)``.
+    Memory is O(G * E * C_g * d) = O(k*T*cf*d).
+
+    Quantized experts run through ``ops.ap_moe_expert_linear`` (one
+    grouped launch per projection stage, gate+up fused dual-GEMM,
+    scalar-prefetched live-row counts skipping empty capacity tiles) --
+    token-identical to the legacy batched ``_expert_matmul`` path
+    (``GROUPED_MOE = False``), which remains the dense fallback.
+
+    Returns ``(y, aux, stats)``; ``stats`` carries per-layer capacity
+    telemetry -- ``load (E,)`` tokens kept per expert, ``dropped ()``
+    assignments lost to the capacity bound, ``capacity ()`` total
+    dispatch slots -- all int32, computed from the routing one-hots
+    (XLA dead-code-eliminates them when the caller drops ``stats``, so
+    collection is free unless observability asks for it).
     """
     b, s, d = x.shape
     e, k = cfg.n_experts, cfg.top_k
@@ -738,7 +768,12 @@ def moe_apply(params: dict, x: jax.Array, cfg: ModelConfig, quant=None):
     else:
         g = 1
     tg = t // g
-    cap = int(np.ceil(k * tg * cfg.capacity_factor / e))
+    # capacity never needs to exceed the group's total routed assignments
+    # (tg*k): with tiny decode batches and a generous capacity_factor the
+    # ceil formula would dispatch mostly-empty rows the expert GEMM then
+    # pays for -- the clamp cannot drop a token (pos < tg*k always), it
+    # only removes rows that could never hold one
+    cap = min(int(np.ceil(k * tg * cfg.capacity_factor / e)), tg * k)
     xt = x.reshape(t, d)
     xg = x.reshape(g, tg, d)
 
@@ -764,15 +799,49 @@ def moe_apply(params: dict, x: jax.Array, cfg: ModelConfig, quant=None):
     # fold groups into capacity for the expert GEMMs: (E, G*C, d)
     disp_e = disp.transpose(1, 0, 2, 3).reshape(e, g * cap, d)
 
-    # gate and up share one quantized-activation stream (the dispatched
-    # tokens are quantized once, not once per projection)
-    pre = (_expert_quantize(disp_e, quant.a_bits)
-           if isinstance(params["w_up"], BipolarTensor) else None)
-    up = _expert_matmul(params["w_up"], disp_e, quant, pre)
-    gate = _expert_matmul(params["w_gate"], disp_e, quant, pre)
-    h = (jax.nn.silu(gate.astype(jnp.float32)) * up.astype(jnp.float32)
-         ).astype(x.dtype)
-    out = _expert_matmul(params["w_down"], h, quant)            # (E, G*C, d)
+    # kept assignments per (group, expert) -- drives both the grouped
+    # kernel's tile-skip prefetch and the capacity telemetry
+    counts = (oh * keep[..., None].astype(jnp.int32)).sum(1)    # (G, E)
+    counts_e = counts.T                                         # (E, G)
+
+    quantized = isinstance(params["w_up"], BipolarTensor)
+    if quantized and GROUPED_MOE:
+        # grouped kernel: one launch for gate+up (dual-GEMM, shared
+        # quantized A-stream), one for down; scalar-prefetched counts
+        # skip capacity tiles with no live tokens
+        h = ops.ap_moe_expert_linear(
+            disp_e, params["w_gate"], w2=params["w_up"], counts=counts_e,
+            a_bits=quant.a_bits, act="silu", variant=quant.variant,
+            out_dtype=x.dtype)
+        out = ops.ap_moe_expert_linear(
+            h, params["w_down"], counts=counts_e, a_bits=quant.a_bits,
+            variant=quant.variant, out_dtype=x.dtype)           # (E, G*C, d)
+    elif quantized:
+        # legacy batched-over-E oracle for the grouped kernel: gate and
+        # up share one quantized-activation stream, the dual epilogue
+        # composes in f32.  optimization_barrier pins the bf16
+        # materialization points the kernel pins physically (its HBM
+        # operand/result round-trips) -- without them XLA's excess-
+        # precision pass elides the f32->bf16->f32 converts between
+        # stages in a fused graph and the two paths bit-diverge
+        disp_e = jax.lax.optimization_barrier(disp_e)
+        pre = _expert_quantize(disp_e, quant.a_bits)
+        gate = _expert_matmul(params["w_gate"], disp_e, quant, pre,
+                              out_dtype=jnp.float32)
+        up = _expert_matmul(params["w_up"], disp_e, quant, pre,
+                            out_dtype=jnp.float32)
+        h = jax.lax.optimization_barrier(
+            (jax.nn.silu(gate) * up).astype(x.dtype))
+        out = jax.lax.optimization_barrier(
+            _expert_matmul(params["w_down"], h, quant))         # (E, G*C, d)
+    else:
+        # dense (unquantized) fallback -- kept barrier-free: the float
+        # path trains, and optimization_barrier has no grad rule
+        up = _expert_matmul(params["w_up"], disp_e, quant)
+        gate = _expert_matmul(params["w_gate"], disp_e, quant)
+        h = (jax.nn.silu(gate.astype(jnp.float32)) * up.astype(jnp.float32)
+             ).astype(x.dtype)
+        out = _expert_matmul(params["w_down"], h, quant)        # (E, G*C, d)
 
     out_g = out.reshape(e, g, cap, d).transpose(1, 0, 2, 3)     # (G, E, C, d)
     if g > 1:
@@ -795,4 +864,10 @@ def moe_apply(params: dict, x: jax.Array, cfg: ModelConfig, quant=None):
         jax.nn.one_hot(top_e[..., 0].reshape(-1), e, dtype=jnp.float32), 0)
     frac_probs = jnp.mean(probs.reshape(-1, e), 0)
     aux = e * jnp.sum(frac_tokens * frac_probs) * cfg.router_aux_coef
-    return y.reshape(b, s, d), aux
+
+    routed = oh.sum(axis=(0, 1))                                # (E,) int32
+    load = counts.sum(axis=0)                                   # (E,) int32
+    stats = {"load": load,
+             "dropped": (routed - load).sum(),
+             "capacity": jnp.int32(e * cap * g)}
+    return y.reshape(b, s, d), aux, stats

@@ -130,7 +130,12 @@ def init_params(cfg: ModelConfig, key) -> dict:
 def _apply_block(p, x, cfg, mixer_kind, ffn_kind, *, positions, cache,
                  cross_memory=None, cross_params=None, cross_cache=None,
                  quant=None):
-    """One transformer block. Returns (x, (new_cache, new_cross), aux).
+    """One transformer block.
+
+    Returns ``(x, (new_cache, new_cross), aux, moe_stats)`` --
+    ``moe_stats`` is the :func:`repro.models.layers.moe_apply` telemetry
+    dict for MoE blocks and ``None`` otherwise (callers that ignore it
+    let XLA dead-code-eliminate the collection).
 
     Quantized serving with ``quant.fused_linear`` (and the default
     ``residual_scale == 1``) threads the block input as ``residual``
@@ -162,17 +167,18 @@ def _apply_block(p, x, cfg, mixer_kind, ffn_kind, *, positions, cache,
             residual=x if fuse_res else None)
         x = hc if fuse_res else x + hc.astype(x.dtype) * rs
     aux = 0.0
+    moe_stats = None
     if ffn_kind != "none":
         h = L.norm_apply(p["norm2"], x, cfg)
         if ffn_kind == "moe":
-            h, aux = L.moe_apply(p["ffn"], h, cfg, quant=quant)
+            h, aux, moe_stats = L.moe_apply(p["ffn"], h, cfg, quant=quant)
             x = x + h.astype(x.dtype) * rs
         else:
             h = L.mlp_apply(p["ffn"], h, cfg, quant=quant,
                             residual=x if fuse_res else None)
             x = h if fuse_res else x + h.astype(x.dtype) * rs
         x = constrain(x, "residual")
-    return x, (new_cache, new_cross), aux
+    return x, (new_cache, new_cross), aux, moe_stats
 
 
 def _make_cache_for(cfg: ModelConfig, kind: str, batch: int, max_len: int,
@@ -236,12 +242,19 @@ def forward(params: dict, tokens: jax.Array, cfg: ModelConfig, *,
             frames: Optional[jax.Array] = None,
             quant: Optional[QuantConfig] = None,
             remat: bool = True,
-            logits_mode: str = "none"):
+            logits_mode: str = "none",
+            collect_moe_stats: bool = False):
     """Run the stack.  Returns ``(hidden|logits, new_caches, aux_loss)``.
 
     ``logits_mode``: "none" (return final hidden states), "last" (logits of
     the final position only -- decode), "all" is handled by
     :func:`loss_and_logits` in chunks.
+
+    ``collect_moe_stats=True`` appends a 4th element: the per-MoE-layer
+    capacity telemetry ``{"load": (L_moe, E), "dropped": (L_moe,),
+    "capacity": (L_moe,)}`` (int32; rows ordered prelude layers first,
+    then scanned unit positions with their ``n_units`` stacked per row
+    group), or ``None`` if the stack has no MoE layers.
     """
     b, s = tokens.shape
     # a QuantConfig that only sets kv_bits still matters (cache reads);
@@ -270,26 +283,29 @@ def forward(params: dict, tokens: jax.Array, cfg: ModelConfig, *,
     new_caches: dict = {}
 
     # --- prelude (unrolled) ---
+    moe_parts = []
     if prelude_plan:
         new_caches["prelude"] = []
         for i, (mk, fk) in enumerate(prelude_plan):
             c = caches["prelude"][i] if caches else None
-            x, (nc, _), aux = _apply_block(
+            x, (nc, _), aux, mst = _apply_block(
                 params["prelude"][i], x, cfg, mk, fk,
                 positions=positions, cache=c, quant=quant)
             aux_total += aux
             new_caches["prelude"].append(nc)
+            if collect_moe_stats and mst is not None:
+                moe_parts.append(mst)
 
     # --- scanned unit stack ---
     cross_stack = params.get("cross")
 
     def unit_body(x, unit_inp):
         p_unit, c_unit, x_unit, xc_unit = unit_inp
-        new_c, new_xc = [], []
+        new_c, new_xc, st_u = [], [], []
         aux_u = jnp.zeros((), jnp.float32)
         for i, (mk, fk) in enumerate(unit_plan):
             xp = (x_unit[i] if x_unit is not None else None)
-            x, (nc, nxc), aux = _apply_block(
+            x, (nc, nxc), aux, mst = _apply_block(
                 p_unit[i], x, cfg, mk, fk, positions=positions,
                 cache=(c_unit[i] if c_unit is not None else None),
                 cross_memory=cross_memory, cross_params=xp,
@@ -298,8 +314,9 @@ def forward(params: dict, tokens: jax.Array, cfg: ModelConfig, *,
             aux_u += aux
             new_c.append(nc)
             new_xc.append(nxc)
+            st_u.append(mst if collect_moe_stats else None)
         x = constrain(x, "residual")
-        return x, (new_c, new_xc, aux_u)
+        return x, (new_c, new_xc, aux_u, st_u)
 
     body = jax.checkpoint(unit_body) if remat else unit_body
 
@@ -314,19 +331,32 @@ def forward(params: dict, tokens: jax.Array, cfg: ModelConfig, *,
           c_blocks,
           _restack_cross(cross_stack, len(unit_plan)) if cross_stack else None,
           xc_blocks)
-    x, (nc_blocks, nxc_blocks, aux_units) = jax.lax.scan(scan_fn, x, xs)
+    x, (nc_blocks, nxc_blocks, aux_units, st_units) = \
+        jax.lax.scan(scan_fn, x, xs)
     aux_total += aux_units.sum()
     if caches is not None:
         new_caches["blocks"] = nc_blocks
         if xc_blocks is not None:
             new_caches["cross"] = nxc_blocks
+    moe_parts += [st for st in st_units if st is not None]
 
     x = L.norm_apply(params["final_norm"], x, cfg)
 
+    moe_stats = None
+    if collect_moe_stats and moe_parts:
+        # prelude entries have no leading layer dim; scanned entries carry
+        # (n_units, ...) -- normalize each to rows and concatenate
+        moe_stats = {
+            kk: jnp.concatenate(
+                [p[kk][None] if p[kk].ndim == (1 if kk == "load" else 0)
+                 else p[kk] for p in moe_parts], 0)
+            for kk in ("load", "dropped", "capacity")}
+
+    out = x
     if logits_mode == "last":
-        logits = _logits(params, x[:, -1:, :], cfg, quant)
-        return logits[:, 0], (new_caches if caches is not None else None), aux_total
-    return x, (new_caches if caches is not None else None), aux_total
+        out = _logits(params, x[:, -1:, :], cfg, quant)[:, 0]
+    ret = (out, (new_caches if caches is not None else None), aux_total)
+    return ret + ((moe_stats,) if collect_moe_stats else ())
 
 
 def _restack_cross(cross_stack, unit_len: int):
@@ -351,8 +381,9 @@ def encode_frames(params, frames, cfg: ModelConfig, *, quant=None,
     enc_cfg = dataclasses.replace(cfg, n_kv_heads=cfg.n_heads, causal=False)
 
     def body(x, p):
-        x, _, _ = _apply_block(p, x, enc_cfg, "attn", "dense",
-                               positions=positions, cache=None, quant=quant)
+        x, _, _, _ = _apply_block(p, x, enc_cfg, "attn", "dense",
+                                  positions=positions, cache=None,
+                                  quant=quant)
         return x, None
 
     body_fn = jax.checkpoint(body) if remat else body

@@ -34,6 +34,8 @@ from __future__ import annotations
 import time
 from typing import Any, Callable, Optional
 
+import numpy as np
+
 from repro.obs.metrics import (LATENCY_BUCKETS, TOKEN_BUCKETS,
                                MetricsRegistry)
 from repro.obs.trace import Tracer
@@ -103,6 +105,18 @@ class ServingObs:
             "fraction of the chunk budget the step's plan used")
         self._g_occupancy = r.gauge(
             "repro_pool_occupancy", "used / usable pool blocks")
+        # MoE capacity pressure (per forward dispatch, fed by the
+        # engine's moe_stats-specialized steps)
+        self._h_moe_load = r.histogram(
+            "repro_moe_expert_load",
+            "tokens dispatched to one expert in one MoE layer pass",
+            buckets=TOKEN_BUCKETS)
+        self._c_moe_dropped = r.counter(
+            "repro_moe_dropped_tokens",
+            "routed assignments lost to the expert capacity bound")
+        self._g_moe_util = r.gauge(
+            "repro_moe_capacity_utilization",
+            "kept assignments / dispatch slots over the last forward")
 
     # -- clock ---------------------------------------------------------------
     def t(self) -> float:
@@ -221,6 +235,25 @@ class ServingObs:
         if tok_lanes:
             self._g_pad_waste.set(1.0 - tok_live / tok_lanes)
 
+    def on_moe(self, stats: Any) -> None:
+        """Record one forward pass's MoE capacity telemetry: ``stats``
+        is the :func:`repro.models.model.forward` dict -- ``load``
+        ``(L_moe, E)`` kept tokens per expert, ``dropped (L_moe,)``
+        assignments lost to the capacity bound, ``capacity (L_moe,)``
+        dispatch slots -- device arrays; the host transfer happens
+        here, off the jitted step."""
+        if stats is None:
+            return
+        load = np.asarray(stats["load"])
+        for v in load.reshape(-1):
+            self._h_moe_load.observe(float(v))
+        dropped = int(np.asarray(stats["dropped"]).sum())
+        if dropped:
+            self._c_moe_dropped.inc(dropped)
+        cap = int(np.asarray(stats["capacity"]).sum())
+        if cap:
+            self._g_moe_util.set(float(load.sum()) / cap)
+
 
 class _NullObs:
     """Disabled twin of :class:`ServingObs`: every hook is a constant
@@ -260,6 +293,9 @@ class _NullObs:
         pass
 
     def on_dispatch(self, **kw):
+        pass
+
+    def on_moe(self, stats):
         pass
 
 

@@ -105,40 +105,53 @@ def prefill_step(params, batch: dict, caches, cfg: ModelConfig,
     return logits, caches
 
 
-@partial(jax.jit, static_argnames=("cfg", "quant"))
+@partial(jax.jit, static_argnames=("cfg", "quant", "moe_stats"))
 def prefill_step_bucketed(params, batch: dict, caches, cfg: ModelConfig,
-                          quant: Optional[QuantConfig] = None):
+                          quant: Optional[QuantConfig] = None,
+                          moe_stats: bool = False):
     """Prefill a length-bucketed prompt: tokens are padded past the real
     length (pad positions -1, masked everywhere) and the logits are taken
     at ``batch["last_idx"]`` (B,) -- the last *real* token -- instead of
     the last padded position.  Jits once per bucket, not per length.
+
+    ``moe_stats=True`` (static) appends the per-MoE-layer capacity
+    telemetry dict (:func:`repro.models.model.forward`) to the return.
     """
-    x, caches, _ = M.forward(
+    out = M.forward(
         params, batch["tokens"], cfg,
         positions=batch.get("positions"),
         patch_embeds=batch.get("patch_embeds"),
         frames=batch.get("frames"),
-        caches=caches, quant=quant, remat=False, logits_mode="none")
+        caches=caches, quant=quant, remat=False, logits_mode="none",
+        collect_moe_stats=moe_stats)
+    x, caches = out[0], out[1]
     idx = batch["last_idx"].astype(jnp.int32)           # (B,)
     xl = jnp.take_along_axis(
         x, idx[:, None, None].astype(jnp.int32), axis=1)  # (B, 1, d)
     logits = M._logits(params, xl, cfg, quant)
+    if moe_stats:
+        return logits[:, 0], caches, out[3]
     return logits[:, 0], caches
 
 
-@partial(jax.jit, static_argnames=("cfg", "quant"))
+@partial(jax.jit, static_argnames=("cfg", "quant", "moe_stats"))
 def serve_step(params, batch: dict, caches, cfg: ModelConfig,
-               quant: Optional[QuantConfig] = None):
+               quant: Optional[QuantConfig] = None,
+               moe_stats: bool = False):
     """One decode step: one new token per sequence against the caches.
 
     ``batch``: tokens (B, 1), positions (B, 1) (or (3, B, 1) M-RoPE).
-    Returns ``(logits (B, V), caches)``.
+    Returns ``(logits (B, V), caches)`` -- plus the per-MoE-layer
+    capacity telemetry dict when ``moe_stats=True`` (static).
     """
-    logits, caches, _ = M.forward(
+    out = M.forward(
         params, batch["tokens"], cfg,
         positions=batch["positions"],
-        caches=caches, quant=quant, remat=False, logits_mode="last")
-    return logits, caches
+        caches=caches, quant=quant, remat=False, logits_mode="last",
+        collect_moe_stats=moe_stats)
+    if moe_stats:
+        return out[0], out[1], out[3]
+    return out[0], out[1]
 
 
 def kv_cache_bytes(caches, *, payload_only: bool = False) -> int:
@@ -341,6 +354,13 @@ class Engine:
                 f"metrics: expected None/bool/MetricsRegistry/"
                 f"ServingObs, got {type(metrics).__name__}")
         self._deadlines = False     # fast-path: no deadline submitted yet
+        # MoE capacity telemetry: only worth a distinct jit specialization
+        # (and host transfers) when observability is on AND the stack has
+        # MoE layers; with NULL_OBS the steps compile without the stats
+        # outputs and the hot path is untouched
+        self._moe_telemetry = bool(
+            self.obs.enabled
+            and any(cfg.ffn_kind(i) == "moe" for i in range(cfg.n_layers)))
         self.chunk_tokens_processed = 0
         if chunk_tokens is not None and not paged:
             raise ValueError("chunk_tokens requires paged=True (chunked "
@@ -705,8 +725,14 @@ class Engine:
                  if self.pool.slots is not None else None)
         caches = self.pool.step_caches(
             tables, np.asarray([start], np.int32), slots=slots)
-        logits, caches = prefill_step_bucketed(
-            self.params, batch, caches, self.cfg, self.quant)
+        if self._moe_telemetry:
+            logits, caches, mst = prefill_step_bucketed(
+                self.params, batch, caches, self.cfg, self.quant,
+                moe_stats=True)
+            self.obs.on_moe(mst)
+        else:
+            logits, caches = prefill_step_bucketed(
+                self.params, batch, caches, self.cfg, self.quant)
         self.pool.absorb(caches)
         return logits
 
@@ -811,8 +837,14 @@ class Engine:
         caches = self.pool.step_caches(
             tables, lens, block_offsets=offsets,
             slots=slot_ids if self.pool.slots is not None else None)
-        logits, caches = serve_step(self.params, batch, caches,
-                                    self.cfg, self.quant)
+        if self._moe_telemetry:
+            logits, caches, mst = serve_step(self.params, batch, caches,
+                                             self.cfg, self.quant,
+                                             moe_stats=True)
+            self.obs.on_moe(mst)
+        else:
+            logits, caches = serve_step(self.params, batch, caches,
+                                        self.cfg, self.quant)
         self.pool.absorb(caches)
         return np.asarray(logits, np.float32)
 
@@ -857,8 +889,14 @@ class Engine:
                  "positions": jnp.asarray(pos),
                  "last_idx": jnp.asarray(last, jnp.int32)}
         caches = self.pool.step_caches(tables, lens, block_offsets=offsets)
-        logits, caches = prefill_step_bucketed(
-            self.params, batch, caches, self.cfg, self.quant)
+        if self._moe_telemetry:
+            logits, caches, mst = prefill_step_bucketed(
+                self.params, batch, caches, self.cfg, self.quant,
+                moe_stats=True)
+            self.obs.on_moe(mst)
+        else:
+            logits, caches = prefill_step_bucketed(
+                self.params, batch, caches, self.cfg, self.quant)
         self.pool.absorb(caches)
         logits = np.asarray(logits, np.float32)
         return [logits[i] for i in range(len(plan))]

@@ -603,6 +603,32 @@ class PagedKVPool:
             else:
                 self._destroy(bid)
 
+    @property
+    def free_uncached_blocks(self) -> int:
+        """Blocks on the free list proper -- allocatable WITHOUT evicting
+        a cached (refcount-0, prefix-indexed) block.  The sub-block
+        window compactor gates on this: trading a cached block for a
+        net-zero block-count move would silently shrink the prefix
+        cache."""
+        return len(self._free)
+
+    def copy_tail(self, src: int, dst: int, start: int) -> None:
+        """Copy slot rows ``start..block_size`` of block ``src`` into
+        the SAME slots of ``dst``, every plane plus the ``pos`` tags
+        (sub-block sliding-window compaction: the live tail of a
+        straddling block moves, with its absolute positions, into a
+        fresh block that doubles as the chain's next append target).
+        ``src`` is only read -- prefix-shared copies stay intact for
+        their other readers."""
+        s, d = int(src), int(dst)
+        sl = slice(int(start), self.block_size)
+        for c, stacked in self._attn_caches():
+            for key in _KV_KEYS:
+                if stacked:
+                    c[key] = c[key].at[:, d, sl].set(c[key][:, s, sl])
+                else:
+                    c[key] = c[key].at[d, sl].set(c[key][s, sl])
+
     def cow(self, bid: int) -> int:
         """Copy-on-write: clone ``bid``'s planes into a fresh block and
         drop one reference on the original.  Callers must route every

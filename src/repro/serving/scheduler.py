@@ -149,11 +149,14 @@ class Scheduler:
     """
 
     def __init__(self, pool: PagedKVPool, *, max_len: int, max_batch: int,
-                 chunk_tokens: Optional[int] = None, obs=None):
+                 chunk_tokens: Optional[int] = None, obs=None,
+                 tail_compaction: bool = True):
         assert chunk_tokens is None or chunk_tokens >= 1, chunk_tokens
         self.pool = pool
         self.max_len, self.max_batch = max_len, max_batch
         self.chunk_tokens = chunk_tokens
+        # sub-block sliding-window compaction (see _compact_tail)
+        self.tail_compaction = tail_compaction
         self.waiting: deque = deque()      # of engine.Request
         self.running: list[SequenceState] = []
         # lifecycle tracing facade (the engine passes its ServingObs;
@@ -178,6 +181,10 @@ class Scheduler:
         self._c_stall_steps = m.counter(
             "repro_sched_stall_steps",
             "steps that co-scheduled prompt work with a running decode")
+        self._c_compactions = m.counter(
+            "repro_sched_tail_compactions",
+            "straddling window-edge blocks released early by copying "
+            "their live tail into a pre-seeded append block")
         self._admit_counter = 0
         # (head request, pool.version) of the last admission probe that
         # failed the capacity gate: while neither changes, re-probing
@@ -421,14 +428,71 @@ class Scheduler:
             return
         n_dead = max(0, (seq.length - w + 1) // self.pool.block_size)
         drop = n_dead - seq.freed_prefix
-        if drop <= 0:
+        if drop > 0:
+            # the write-target block (logical length // bs) is never dead
+            # for window >= 1, so the live suffix keeps at least the tail
+            assert drop <= len(seq.blocks), (drop, len(seq.blocks))
+            dead, seq.blocks = seq.blocks[:drop], seq.blocks[drop:]
+            seq.freed_prefix = n_dead
+            self.pool.release(dead, window_reclaim=True)
+        self._compact_tail(seq, n_dead)
+
+    def _compact_tail(self, seq: SequenceState, n_dead: int) -> None:
+        """Sub-block compaction at the window edge: release the
+        *straddling* block (head slots dead, tail slots live) a whole
+        block-lifetime early by copying its live tail into a fresh
+        block pre-seeded as the chain's NEXT append target.
+
+        With window ``w`` and block size ``bs``, ``d0 = (length-w+1) %
+        bs`` head slots of logical block ``j = n_dead`` are permanently
+        out of window but the block stays held until ``d0`` wraps --
+        on average ``bs/2`` dead slots per request.  Instead: allocate
+        a fresh block ``F``, copy the straddler's live slots
+        ``d0..bs`` (positions AND planes, slot-aligned) into ``F``,
+        append ``F`` as logical block ``jt+1`` (``jt`` = the current
+        tail), bump ``freed_prefix`` past the straddler and release it.
+        Held blocks stay constant *now* but the next append-driven
+        allocation is already satisfied, so peak blocks drop by ~1 per
+        request.  The paged kernel reads keys by per-slot ``pos`` tag
+        across every table entry, so a copied token's KV may live in a
+        block that is not its natural ``pos // bs`` home.
+
+        Die-before-clobber: ``F`` slot ``o`` is overwritten when
+        position ``(jt+1)*bs + o`` lands; a step writing ``n`` tokens
+        from query position ``q0`` may clobber while ``q0`` still
+        attends the copied token unless ``d0 >= fill - bs + 1 + (n-1)``
+        (``fill`` = tokens in the tail block) -- always true for
+        decode (``n=1``, RHS <= 1 <= d0), checked against the chunk
+        budget otherwise.  Guards: the straddler must not be the write
+        target (``len(blocks) >= 2``), a prior compaction must not
+        have advanced past it (``freed_prefix == n_dead``), and the
+        pool must hold a strictly-free block -- evicting a cached
+        block for a net-zero count move would shrink the prefix cache.
+        """
+        if not self.tail_compaction:
             return
-        # the write-target block (logical length // bs) is never dead
-        # for window >= 1, so the live suffix keeps at least the tail
-        assert drop <= len(seq.blocks), (drop, len(seq.blocks))
-        dead, seq.blocks = seq.blocks[:drop], seq.blocks[drop:]
-        seq.freed_prefix = n_dead
-        self.pool.release(dead, window_reclaim=True)
+        w = self.pool.cfg.window
+        dead_tokens = seq.length - w + 1
+        if dead_tokens <= 0 or seq.freed_prefix != n_dead \
+                or len(seq.blocks) < 2:
+            return
+        bs = self.pool.block_size
+        d0 = dead_tokens % bs
+        if d0 < 1:
+            return
+        fill = seq.length - (seq.length - 1) // bs * bs
+        slack = (self.chunk_tokens or 1) - 1
+        if d0 < fill - bs + 1 + slack:
+            return
+        if self.pool.free_uncached_blocks < 1:
+            return
+        (fresh,) = self.pool.alloc(1)
+        self.pool.copy_tail(seq.blocks[0], fresh, d0)
+        head = seq.blocks[0]
+        seq.blocks = seq.blocks[1:] + [fresh]
+        seq.freed_prefix = n_dead + 1
+        self.pool.release([head], window_reclaim=True)
+        self._c_compactions.inc()
 
     def reclaim_out_of_window(self) -> None:
         """Roll every running request's block table past its dead

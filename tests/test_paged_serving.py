@@ -550,7 +550,12 @@ def test_window_reclaim_spares_shared_prefix_blocks():
     cfg, _ = _setup("mixtral-8x7b", n_layers=2, window=8)
     from repro.serving.scheduler import Scheduler
     pool = PagedKVPool(cfg, n_blocks=20, block_size=4, quant=_kv8(cfg))
-    sch = Scheduler(pool, max_len=64, max_batch=4)
+    # tail_compaction off: this test stages a STRADDLING shared block
+    # (compaction would release it at admission before b arrives --
+    # covered by the compaction suite); here we pin the pre-compaction
+    # layout to prove block-granular reclaim is refcount-safe
+    sch = Scheduler(pool, max_len=64, max_batch=4,
+                    tail_compaction=False)
 
     def stub_prefill(seq, tokens):
         seq.length = len(tokens)

@@ -65,6 +65,27 @@ the no-op ``NULL_OBS`` sink: hooks cost one constant no-op call, no
 clock read, no allocation -- the hot path and token-identity are
 untouched when observability is off.
 
+**Robustness** (``faults=...``, ``max_queue=...``, ``validate_every=...``):
+the engine contains failures at the *request* level, never the step
+level.  A non-finite logits row or an ``on_token`` callback exception
+quarantines exactly the offending sequence -- ``finish_reason='error'``,
+the error surfaced on ``StreamHandle.result().error``, its blocks and
+state slot released through the refcount path -- while the rest of the
+batch keeps producing bit-identical tokens to a fault-free run.
+``finish_reason`` is always one of :attr:`Request.FINISH_REASONS`
+(``length | timeout | cancelled | rejected | error``).  ``max_queue=N``
+bounds the waiting queue: submits past the bound are shed with
+``finish_reason='rejected'`` and a ``retry_after`` hint derived from
+queue depth and pool occupancy (``StreamHandle.resubmit`` retries with
+capped exponential backoff).  ``validate_every=N`` runs the pool's
+invariant checker off the hot path every N steps; a violation
+quarantines the corrupt chains and rebuilds the free lists instead of
+raising.  ``faults=FaultInjector(seed, ...)`` threads a deterministic,
+seeded fault schedule through the pool, scheduler, and engine
+(:mod:`repro.serving.faults`) so tests/test_chaos.py can prove all of
+the above; the default ``NULL_FAULTS`` twin keeps the hot path
+token-identical with faults off.
+
 Serving uses quantized packed weights (the paper's technique); pass
 ``quant=cfg.quant`` after :func:`repro.models.model.quantize_params`.
 """
@@ -83,6 +104,7 @@ import numpy as np
 from repro.models import model as M
 from repro.models.config import ModelConfig, QuantConfig
 from repro.obs import NULL_OBS, MetricsRegistry, ServingObs
+from repro.serving.faults import NULL_FAULTS, RequestFault
 
 
 # ---------------------------------------------------------------------------
@@ -219,14 +241,23 @@ class Request:                      # must never compare prompt arrays
                                     # sample diverse completions)
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
-    error: Optional[str] = None     # set on clean rejection (paged)
+    error: Optional[str] = None     # rejection / quarantine detail
     # -- async streaming API -------------------------------------------------
     on_token: Optional[Callable[[int], None]] = None   # emission-order cb
     timeout: Optional[float] = None  # seconds from submit to deadline
     deadline: Optional[float] = None  # absolute (engine clock); computed
                                       # from ``timeout`` at submit if unset
-    # why the request stopped: length | timeout | cancelled | rejected
+    # why the request stopped: one of FINISH_REASONS (the class constant
+    # below is THE enum -- obs labels and tests assert against it)
     finish_reason: Optional[str] = None
+    # backpressure hint: seconds to wait before resubmitting, set when
+    # the engine sheds this request off a full queue (max_queue)
+    retry_after: Optional[float] = None
+
+    # not a dataclass field (no annotation): the single definition of
+    # every value ``finish_reason`` may take
+    FINISH_REASONS = frozenset(
+        {"length", "timeout", "cancelled", "rejected", "error"})
 
 
 class StreamHandle:
@@ -250,8 +281,54 @@ class StreamHandle:
     def finish_reason(self) -> Optional[str]:
         return self.req.finish_reason
 
+    @property
+    def error(self) -> Optional[str]:
+        """Rejection / quarantine detail (``finish_reason`` in
+        ``{'rejected', 'error'}``), else None."""
+        return self.req.error
+
+    @property
+    def retry_after(self) -> Optional[float]:
+        """Backpressure hint attached when the engine shed this request
+        off a full queue."""
+        return self.req.retry_after
+
     def cancel(self) -> bool:
         return self.engine.cancel(self.req)
+
+    def resubmit(self, max_attempts: int = 5, base_delay: float = 0.05,
+                 max_delay: float = 2.0,
+                 sleep: Optional[Callable[[float], None]] = None
+                 ) -> "StreamHandle":
+        """Client-side backoff helper: while the request sits shed
+        (``finish_reason='rejected'``), wait max(engine ``retry_after``
+        hint, capped exponential backoff) and submit it again.  Returns
+        self once the request is back in the engine (drive it with
+        :meth:`tokens`/:meth:`result` as usual) or after
+        ``max_attempts`` consecutive sheds.  ``sleep`` is injectable so
+        tests back off on a fake clock."""
+        sleep = time.sleep if sleep is None else sleep
+        for attempt in range(max_attempts):
+            if not (self.req.done and self.req.finish_reason == "rejected"):
+                return self
+            sleep(min(max_delay, max(self.req.retry_after or 0.0,
+                                     base_delay * (2 ** attempt))))
+            self._reset_for_resubmit()
+            self.engine.submit(self.req)
+        return self
+
+    def _reset_for_resubmit(self) -> None:
+        """Clear the terminal fields a shed left behind so the request
+        can go through ``submit`` again (deadline is recomputed from
+        ``timeout``; emitted tokens are untouched -- a shed request
+        never emitted any)."""
+        r = self.req
+        r.done = False
+        r.error = None
+        r.finish_reason = None
+        r.retry_after = None
+        r.deadline = None
+        r._engine = None       # re-arm the double-submit guard
 
     def tokens(self, max_steps: int = 10_000):
         """Yield output tokens as they are emitted, stepping the engine
@@ -324,19 +401,32 @@ class Engine:
                  prefix_cache: bool = True,
                  chunk_tokens: Optional[int] = None,
                  clock: Optional[Callable[[], float]] = None,
-                 metrics=None):
+                 metrics=None, faults=None,
+                 max_queue: Optional[int] = None,
+                 validate_every: Optional[int] = None):
         self.params, self.cfg, self.quant = params, cfg, quant
         self.n_slots, self.max_len = n_slots, max_len
         self.paged = paged
         self.steps = 0
         self._seed_counter = 0      # default per-request sampling seeds
+        # fault facade (repro.serving.faults): one seeded schedule shared
+        # by the pool, scheduler, and engine; NULL_FAULTS (default) is
+        # the constant-False twin -- hot path and tokens untouched
+        self.faults = faults if faults is not None else NULL_FAULTS
+        # backpressure: bound on the waiting queue; submits past it are
+        # shed with finish_reason='rejected' + a retry_after hint
+        self.max_queue = max_queue
+        # pool integrity watchdog cadence (steps between validate runs)
+        assert validate_every is None or validate_every >= 1, validate_every
+        self.validate_every = validate_every
         # deadline clock, injectable for deterministic timeout tests;
         # ALL observability timestamps route through it too (satellite
         # of ISSUE 7), so a ServingObs built with its own test clock
-        # supplies the engine clock when none is injected here
+        # supplies the engine clock when none is injected here.  The
+        # fault facade may wrap it with injected forward jumps
         if clock is None and isinstance(metrics, ServingObs):
             clock = metrics.clock
-        self._clock = clock or time.monotonic
+        self._clock = self.faults.wrap_clock(clock)
         # ``metrics``: None/False = off (NULL_OBS: no-op hooks, no clock
         # reads, token-identical hot path); True = fresh ServingObs;
         # or pass a MetricsRegistry / ServingObs to share a namespace
@@ -405,7 +495,8 @@ class Engine:
                 n_state_slots=self.max_batch if stateful else 0,
                 # NULL_OBS.registry is None -> the pool keeps a private
                 # registry, so report() snapshots work with metrics off
-                enc_len=enc, metrics=self.obs.registry)
+                enc_len=enc, metrics=self.obs.registry,
+                faults=self.faults)
             self.scheduler = Scheduler(self.pool, max_len=max_len,
                                        max_batch=self.max_batch,
                                        chunk_tokens=self.chunk_tokens,
@@ -415,9 +506,40 @@ class Engine:
             self.caches = M.init_caches(cfg, n_slots, max_len, quant=quant)
             self.slot_req: list = [None] * n_slots   # SequenceState per lane
             self.queue: list[Request] = []
+        # robustness counters: in the pool's registry (paged) or the
+        # obs registry / a private one (contiguous), so render() scrapes
+        # faults, quarantines, and sheds next to the serving counters
+        reg = self.pool.metrics if paged \
+            else (self.obs.registry or MetricsRegistry())
+        self._c_fault_requests = reg.counter(
+            "repro_engine_fault_requests",
+            "requests quarantined by step-level containment, by fault "
+            "kind", labelnames=("kind",))
+        self._fault_children: dict = {}
+        self._c_fault_steps = reg.counter(
+            "repro_engine_fault_steps",
+            "steps aborted by a transient pool fault the scheduler "
+            "could not absorb (state intact, step retried)")
+        self._c_watchdog = reg.counter(
+            "repro_engine_fault_watchdog_violations",
+            "pool invariant violations caught by the validate_every "
+            "watchdog (corrupt chains quarantined, free lists rebuilt)")
+        self._c_shed = reg.counter(
+            "repro_sched_shed_requests",
+            "submits shed by the max_queue backpressure bound")
+        self._g_retry_after = reg.gauge(
+            "repro_sched_shed_retry_after",
+            "retry_after hint attached to the most recent shed (s)")
+        self.faults.bind(reg)
 
     # -- request lifecycle -------------------------------------------------
     def submit(self, req: Request) -> StreamHandle:
+        # double-submit is idempotent: a request this engine already
+        # holds (queued or running) just gets a fresh handle -- queueing
+        # it twice would double-release through free()'s strict path
+        if getattr(req, "_engine", None) is self and not req.done:
+            return StreamHandle(self, req)
+        req._engine = self
         if getattr(req, "seed", None) is None:
             req.seed = self._seed_counter     # stable across preemption
             self._seed_counter += 1
@@ -429,11 +551,38 @@ class Engine:
         # trace starts BEFORE scheduler.submit so an immediate
         # rejection still closes a balanced span tree
         self.obs.on_submit(req)
+        depth = len(self.scheduler.waiting) if self.paged \
+            else len(self.queue)
+        if self.max_queue is not None and depth >= self.max_queue:
+            self._shed(req, depth)
+            return StreamHandle(self, req)
         if self.paged:
             self.scheduler.submit(req)
         else:
             self.queue.append(req)
         return StreamHandle(self, req)
+
+    def _shed(self, req: Request, depth: int) -> None:
+        """Backpressure: the waiting queue is at ``max_queue`` -- finish
+        the request immediately with ``finish_reason='rejected'`` and a
+        ``retry_after`` hint that grows with queue depth and pool
+        occupancy (deterministic, so shed/backoff behavior replays)."""
+        if self.paged and self.pool.needs_blocks:
+            occ = self.pool.used_blocks / max(self.pool.n_usable, 1)
+        elif self.paged:
+            occ = (self.pool.slots.used_slots
+                   / max(self.pool.slots.n_slots, 1))
+        else:
+            occ = (sum(r is not None for r in self.slot_req)
+                   / max(self.n_slots, 1))
+        req.retry_after = 0.05 * (depth + 1) * (1.0 + occ)
+        req.error = (f"rejected: queue full ({depth} waiting >= "
+                     f"max_queue={self.max_queue})")
+        req.done = True
+        req.finish_reason = "rejected"
+        self._c_shed.inc()
+        self._g_retry_after.set(req.retry_after)
+        self.obs.on_finish(req, "rejected")
 
     def cancel(self, req: Request) -> bool:
         """Abort ``req``: no further tokens are emitted and no further
@@ -490,12 +639,132 @@ class Engine:
     def _emit(self, seq, tok: int) -> None:
         """Append an output token and fire ``on_token``: emission order
         == callback order, and a finished request (cancelled/expired by
-        another lane's callback mid-step) never reaches here again."""
+        another lane's callback mid-step) never reaches here again.
+
+        Callback *exceptions* are isolated per-request: they surface as
+        a :class:`RequestFault` the step loop turns into a quarantine of
+        this request alone (a callback that cancels/expires requests is
+        a supported pattern and raises nothing)."""
         seq.req.out.append(tok)
         self.obs.on_token(seq.req, tok)
+        if self.faults.callback_error(seq.req):
+            raise RequestFault(
+                f"injected on_token failure at token "
+                f"{len(seq.req.out) - 1}", kind="callback")
         cb = getattr(seq.req, "on_token", None)
         if cb is not None:
-            cb(tok)
+            try:
+                cb(tok)
+            except RequestFault:
+                raise
+            except Exception as e:
+                raise RequestFault(f"on_token callback raised: {e!r}",
+                                   kind="callback") from e
+
+    def _sample_checked(self, row: np.ndarray, seq) -> int:
+        """Guarded sampling: a non-finite logits row (numerical blowup,
+        or the injector's poisoned row) never reaches the sampler --
+        it raises a :class:`RequestFault` that quarantines exactly this
+        request.  Always on: the finiteness scan is O(V) on a row the
+        step already materialized on host."""
+        if self.faults.nan_logits(seq.req):
+            row = np.full_like(row, np.nan)
+        if not np.isfinite(row).all():
+            raise RequestFault(
+                f"non-finite logits row at output index "
+                f"{len(seq.req.out)}", kind="nan_logits")
+        return self._sample_token(row, seq)
+
+    def _quarantine(self, seq, exc: Exception) -> None:
+        """Step-level containment: retire exactly the offending
+        sequence with ``finish_reason='error'``, surfacing the cause on
+        ``req.error``; paged blocks and the state slot return through
+        the scheduler's refcount path, a contiguous lane is simply
+        vacated.  The rest of the batch never notices."""
+        kind = getattr(exc, "kind", "exception")
+        req = seq.req
+        if req.error is None:
+            req.error = f"quarantined ({kind}): {exc}"
+        child = self._fault_children.get(kind)
+        if child is None:
+            child = self._c_fault_requests.labels(kind=kind)
+            self._fault_children[kind] = child
+        child.inc()
+        if self.paged and seq in self.scheduler.running:
+            self.scheduler.finish(seq, reason="error")
+            return
+        if not self.paged:
+            for i, s in enumerate(self.slot_req):
+                if s is seq:
+                    self.slot_req[i] = None
+                    break
+        req.done = True
+        req.finish_reason = "error"
+        self.obs.on_finish(req, "error", seq=seq)
+
+    # -- pool integrity watchdog -------------------------------------------
+    def _watchdog(self) -> None:
+        """``validate_every`` cadence: run the pool's full invariant
+        checker off the hot path; on violation, recover instead of
+        raising -- quarantine the chains whose tables are corrupt and
+        rebuild the pool's bookkeeping from the survivors."""
+        try:
+            self.pool.validate()
+        except AssertionError:
+            self._c_watchdog.inc()
+            self._rebuild_pool()
+
+    def _rebuild_pool(self) -> None:
+        """Recover a pool whose invariants broke: block tables are the
+        ground truth.  Sequences whose table is self-evidently corrupt
+        (out-of-range, null, or duplicated block ids; impossible slot)
+        are quarantined *bypassing* release -- their references cannot
+        be trusted against the refcount map.  Every derived structure
+        is then rebuilt from the surviving tables: refcounts from a
+        table-reference count, the free list as the unreferenced ids,
+        the state-slot pool from the surviving slots.  The prefix cache
+        is dropped wholesale (hits become misses; math unchanged) and
+        chain memos reset.  Ends with a full ``validate()`` -- recovery
+        must restore the invariants it is guarding, not defer them."""
+        from collections import Counter as _Counter
+        from repro.serving.paged_cache import ChainMemo
+        pool, sch = self.pool, self.scheduler
+
+        def table_corrupt(s) -> bool:
+            seen = set()
+            for b in s.blocks:
+                b = int(b)
+                if b < 1 or b > pool.n_usable or b in seen:
+                    return True
+                seen.add(b)
+            return pool.slots is not None and s.slot >= 0 \
+                and not 1 <= s.slot <= pool.slots.n_slots
+        bad = [s for s in sch.running if table_corrupt(s)]
+        for seq in bad:
+            sch.running.remove(seq)
+            seq.blocks = []
+            seq.slot = -1
+            self._quarantine(
+                seq, RequestFault("pool integrity violation: block "
+                                  "table corrupt", kind="watchdog"))
+        counts = _Counter(int(b) for s in sch.running for b in s.blocks)
+        pool._ref = dict(counts)
+        pool._lru.clear()            # prefix cache dropped wholesale
+        pool._meta.clear()
+        pool._full_index.clear()
+        pool._partial_index.clear()
+        pool._free = [b for b in range(pool.n_blocks - 1, 0, -1)
+                      if b not in counts]
+        if pool.slots is not None:
+            used = {s.slot for s in sch.running if s.slot >= 1}
+            pool.slots._used = used
+            pool.slots._free = [i for i in range(pool.slots.n_slots, 0, -1)
+                                if i not in used]
+        for seq in sch.running:
+            seq.chain_memo = ChainMemo()
+        pool.version += 1
+        sch._blocked_head = None
+        pool.validate()
 
     def _admit(self):
         for slot in range(self.n_slots):
@@ -609,9 +878,13 @@ class Engine:
         if obs.enabled:
             obs.on_chunk(seq, len(req.prompt), t0, obs.t())
         obs.on_decode_begin(seq)
-        seq.last_tok = self._sample_token(
-            np.asarray(logits[0], np.float32), seq)
-        self._emit(seq, seq.last_tok)
+        try:
+            seq.last_tok = self._sample_checked(
+                np.asarray(logits[0], np.float32), seq)
+            self._emit(seq, seq.last_tok)
+        except RequestFault as e:
+            self._quarantine(seq, e)   # lane stays free for the next admit
+            return
         self.slot_req[slot] = seq
 
     def _contiguous_step(self) -> bool:
@@ -643,8 +916,12 @@ class Engine:
             seq = self.slot_req[slot]
             if seq is None or seq.req.done:   # cancelled by a callback
                 continue
-            seq.last_tok = self._sample_token(logits[slot], seq)
-            self._emit(seq, seq.last_tok)
+            try:
+                seq.last_tok = self._sample_checked(logits[slot], seq)
+                self._emit(seq, seq.last_tok)
+            except RequestFault as e:
+                self._quarantine(seq, e)
+                continue
             seq.length += 1
             if len(seq.req.out) >= seq.req.max_new_tokens \
                     or seq.length >= self.max_len - 1:
@@ -672,7 +949,7 @@ class Engine:
             # already known; the recomputed logits would reproduce it
             seq.last_tok = seq.req.out[-1]
         else:
-            seq.last_tok = self._sample_token(
+            seq.last_tok = self._sample_checked(
                 np.asarray(logits[0], np.float32), seq)
             self._emit(seq, seq.last_tok)
 
@@ -744,18 +1021,35 @@ class Engine:
         obs = self.obs
         t0 = obs.t() if obs.enabled else 0.0
         self._expire()
-        if self.chunk_tokens is None:
-            # whole-prompt mode: admission prefills, the step decodes
-            sch.admit(self._paged_prefill)
-            if not sch.running:
-                return False
-            sch.ensure_append_capacity()   # reclaims out-of-window too
-            plan = [(s, 1) for s in sch.running]
-        else:
-            sch.admit_chunked()
-            plan = sch.ensure_step_capacity(sch.plan_step())
-            if not plan:
-                return False
+        if self.validate_every is not None and self.steps \
+                and self.steps % self.validate_every == 0:
+            self._watchdog()
+        try:
+            if self.chunk_tokens is None:
+                # whole-prompt mode: admission prefills, the step decodes
+                sch.admit(self._paged_prefill)
+                if not sch.running:
+                    # fault-free, an empty step means an empty engine;
+                    # with injection on, an admission race/rollback can
+                    # leave work waiting -- report it so run() retries
+                    return self.faults.enabled and sch.has_work
+                sch.ensure_append_capacity()  # reclaims out-of-window too
+                plan = [(s, 1) for s in sch.running]
+            else:
+                sch.admit_chunked()
+                plan = sch.ensure_step_capacity(sch.plan_step())
+                if not plan:
+                    return self.faults.enabled and sch.has_work
+        except RuntimeError:
+            # a transient pool fault the scheduler could not absorb by
+            # preempting (e.g. injected exhaustion with one request
+            # left).  Alloc is atomic and the rollback paths ran, so
+            # state is intact: consume the step and retry on the next
+            # one.  Grown blocks stay owned by their seqs (reused next
+            # step, no leak)
+            self._c_fault_steps.inc()
+            self.steps += 1
+            return sch.has_work
         chunk_used = 0
         if obs.enabled and self.chunk_tokens is not None:
             chunk_used = sum(n for s, n in plan if s.prefilling)
@@ -914,29 +1208,34 @@ class Engine:
         for (seq, n), row in zip(plan, rows):
             if seq.req.done:    # cancelled/expired by a callback mid-step
                 continue
-            if seq.prefilling:
-                seq.length += n
-                self.chunk_tokens_processed += n
-                if obs.enabled:
-                    obs.on_chunk(seq, n, t_fwd0, t_fwd1)
-                sch.register_progress(seq)
-                if seq.length < len(seq.pending):
-                    continue                   # more chunks to stream
-                seq.pending = None
-                obs.on_decode_begin(seq)
-                if seq.req.out:
-                    # warm resume: the pending input token is known
-                    seq.last_tok = seq.req.out[-1]
-                    continue
-                seq.last_tok = self._sample_token(row, seq)
-                self._emit(seq, seq.last_tok)
-            else:
-                seq.last_tok = self._sample_token(row, seq)
-                self._emit(seq, seq.last_tok)
-                seq.length += 1
-            if len(seq.req.out) >= seq.req.max_new_tokens \
-                    or seq.length >= self.max_len - 1:
-                sch.finish(seq)
+            try:
+                if seq.prefilling:
+                    seq.length += n
+                    self.chunk_tokens_processed += n
+                    if obs.enabled:
+                        obs.on_chunk(seq, n, t_fwd0, t_fwd1)
+                    sch.register_progress(seq)
+                    if seq.length < len(seq.pending):
+                        continue               # more chunks to stream
+                    seq.pending = None
+                    obs.on_decode_begin(seq)
+                    if seq.req.out:
+                        # warm resume: the pending input token is known
+                        seq.last_tok = seq.req.out[-1]
+                        continue
+                    seq.last_tok = self._sample_checked(row, seq)
+                    self._emit(seq, seq.last_tok)
+                else:
+                    seq.last_tok = self._sample_checked(row, seq)
+                    self._emit(seq, seq.last_tok)
+                    seq.length += 1
+                if len(seq.req.out) >= seq.req.max_new_tokens \
+                        or seq.length >= self.max_len - 1:
+                    sch.finish(seq)
+            except RequestFault as e:
+                # step-level containment: retire exactly this sequence;
+                # the other plan entries consume their rows untouched
+                self._quarantine(seq, e)
 
     # -- decode loop --------------------------------------------------------
     def step(self) -> bool:

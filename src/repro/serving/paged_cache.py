@@ -110,6 +110,7 @@ import numpy as np
 from repro.models import model as M
 from repro.models.config import ModelConfig, QuantConfig, effective_kv_bits
 from repro.obs.metrics import MetricsRegistry
+from repro.serving.faults import NULL_FAULTS
 
 _KV_KEYS = ("k", "v", "k_scale", "v_scale", "pos")
 
@@ -293,7 +294,8 @@ class PagedKVPool:
                  quant: Optional[QuantConfig] = None, *,
                  prefix_cache: bool = True, n_state_slots: int = 0,
                  enc_len: Optional[int] = None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 faults=None):
         assert supports_paging(cfg), \
             f"no pageable KV stream or slottable state for {cfg.family!r}"
         kv_bits = effective_kv_bits(cfg, quant)
@@ -324,6 +326,9 @@ class PagedKVPool:
                 "max_len, so it cannot derive the frontend length "
                 "itself -- Engine passes enc_len(cfg, max_len)")
         self.cfg, self.quant = cfg, quant
+        # fault injection facade (tests/chaos harness): site checks are
+        # constant no-ops on the NULL_FAULTS twin, same contract as obs
+        self.faults = faults if faults is not None else NULL_FAULTS
         self.kv_bits = kv_bits
         self.n_blocks, self.block_size = n_blocks, block_size
         self.prefix_cache = prefix_cache
@@ -509,10 +514,25 @@ class PagedKVPool:
 
         The free list is drained first; when dry, refcount-0 cached
         blocks are evicted in LRU order (their prefix-index entries are
-        dropped with them)."""
+        dropped with them).
+
+        Fault sites (both consulted BEFORE any mutation, so alloc is
+        atomic -- it either completes or leaves the pool untouched):
+        ``alloc_fail`` raises the exhaustion error on a satisfiable
+        request; ``forced_evict`` evicts one LRU-cached block first."""
+        if self.faults.alloc_fail(n):
+            raise RuntimeError(
+                f"pool exhausted (injected fault): want {n} blocks, "
+                f"{self.free_blocks} free")
         if n > self.free_blocks:
             raise RuntimeError(
                 f"pool exhausted: want {n} blocks, {self.free_blocks} free")
+        if self.faults.forced_evict() and self._lru:
+            victim, _ = self._lru.popitem(last=False)       # LRU end
+            self._unregister(victim)
+            del self._ref[victim]
+            self._free.append(victim)
+            self._c_evictions.inc()
         self.version += 1
         ids = []
         for _ in range(n):
@@ -831,8 +851,13 @@ class PagedKVPool:
     def alloc_slot(self) -> int:
         """Take one state slot with its rows reset (a reused slot must
         not leak a freed request's SSM state or cross-K/V through the
-        recurrence / position mask)."""
+        recurrence / position mask).  The ``slot_fail`` fault site fires
+        before the slot pool mutates (admission rolls cleanly back)."""
         assert self.slots is not None, "pool has no state slot pool"
+        if self.faults.slot_fail():
+            raise RuntimeError(
+                f"slot pool exhausted (injected fault): "
+                f"{self.slots.free_slots} of {self.slots.n_slots} free")
         slot = self.slots.alloc()
         self._reset_slot(slot)
         return slot

@@ -69,6 +69,7 @@ from typing import Optional
 import numpy as np
 
 from repro.obs import NULL_OBS
+from repro.serving.faults import RequestFault
 from repro.serving.paged_cache import ChainMemo, PagedKVPool
 
 
@@ -150,9 +151,12 @@ class Scheduler:
 
     def __init__(self, pool: PagedKVPool, *, max_len: int, max_batch: int,
                  chunk_tokens: Optional[int] = None, obs=None,
-                 tail_compaction: bool = True):
+                 tail_compaction: bool = True, faults=None):
         assert chunk_tokens is None or chunk_tokens >= 1, chunk_tokens
         self.pool = pool
+        # fault facade: defaults to the pool's injector so engine-built
+        # stacks share ONE seeded schedule across all three subsystems
+        self.faults = faults if faults is not None else pool.faults
         self.max_len, self.max_batch = max_len, max_batch
         self.chunk_tokens = chunk_tokens
         # sub-block sliding-window compaction (see _compact_tail)
@@ -185,6 +189,11 @@ class Scheduler:
             "repro_sched_tail_compactions",
             "straddling window-edge blocks released early by copying "
             "their live tail into a pre-seeded append block")
+        self._c_admit_rollbacks = m.counter(
+            "repro_sched_admit_rollbacks",
+            "admissions rolled back by a transient alloc/slot failure "
+            "(blocks and slot returned through the refcount path, "
+            "request re-queued at the head)")
         self._admit_counter = 0
         # (head request, pool.version) of the last admission probe that
         # failed the capacity gate: while neither changes, re-probing
@@ -263,6 +272,8 @@ class Scheduler:
         same-prefix request hits it."""
         stall = 0     # prompt tokens prefilled while decodes were live
         while self.waiting and len(self.running) < self.max_batch:
+            if self.faults.admit_race():
+                break      # injected race: the head loses this step
             req = self.waiting[0]
             if self.pool.slots is not None \
                     and self.pool.slots.free_slots == 0:
@@ -296,41 +307,78 @@ class Scheduler:
             self.waiting.popleft()
             self._blocked_head = None
             seq.blocks = list(hit.ids)
-            if cow:
-                seq.blocks[-1] = self.pool.cow(seq.blocks[-1])
-            if need - (1 if cow else 0):
-                seq.blocks.extend(self.pool.alloc(need - (1 if cow else 0)))
-            if self.pool.slots is not None:
-                seq.slot = self.pool.alloc_slot()
-            seq.cached_len = hit.cached_len
-            self.pool.record_hit(hit, len(tokens))
-            seq.admitted_at = self._admit_counter
-            self._admit_counter += 1
-            self._c_admissions.inc()
-            # whole-prompt admission stalls every running decode for
-            # the entire suffix -- the O(prompt) tax chunked prefill
-            # bounds (same stall definition either way: prompt tokens
-            # co-scheduled with >= 1 running decode)
-            if any(not s.prefilling for s in self.running):
-                stall += len(tokens) - seq.cached_len
-            obs = self.obs
-            obs.on_admit(seq, cached_tokens=seq.cached_len,
-                         prefilling=True)
-            t0 = obs.t() if obs.enabled else 0.0
-            prefill_fn(seq, tokens)
-            if obs.enabled:
-                obs.on_chunk(seq, len(tokens) - seq.cached_len,
-                             t0, obs.t())
-            obs.on_decode_begin(seq)
-            self.pool.register_chain(tokens, seq.blocks,
-                                     memo=seq.chain_memo)
-            # a long prompt's leading blocks may already be fully out of
-            # the attention window: return them before decode starts
-            self._reclaim_seq(seq)
+            announced = False    # obs.on_admit already fired?
+            try:
+                if cow:
+                    seq.blocks[-1] = self.pool.cow(seq.blocks[-1])
+                if need - (1 if cow else 0):
+                    seq.blocks.extend(
+                        self.pool.alloc(need - (1 if cow else 0)))
+                if self.pool.slots is not None:
+                    seq.slot = self.pool.alloc_slot()
+                seq.cached_len = hit.cached_len
+                self.pool.record_hit(hit, len(tokens))
+                seq.admitted_at = self._admit_counter
+                self._admit_counter += 1
+                self._c_admissions.inc()
+                # whole-prompt admission stalls every running decode for
+                # the entire suffix -- the O(prompt) tax chunked prefill
+                # bounds (same stall definition either way: prompt tokens
+                # co-scheduled with >= 1 running decode)
+                if any(not s.prefilling for s in self.running):
+                    stall += len(tokens) - seq.cached_len
+                obs = self.obs
+                obs.on_admit(seq, cached_tokens=seq.cached_len,
+                             prefilling=True)
+                announced = True
+                t0 = obs.t() if obs.enabled else 0.0
+                prefill_fn(seq, tokens)
+                if obs.enabled:
+                    obs.on_chunk(seq, len(tokens) - seq.cached_len,
+                                 t0, obs.t())
+                obs.on_decode_begin(seq)
+                self.pool.register_chain(tokens, seq.blocks,
+                                         memo=seq.chain_memo)
+                # a long prompt's leading blocks may already be fully out
+                # of the attention window: return them before decode
+                self._reclaim_seq(seq)
+            except Exception as e:
+                self._rollback_admission(req, seq, e, announced)
+                break
             self.running.append(seq)
         if stall:
             self._c_stall_tokens.inc(stall)
             self._c_stall_steps.inc()
+
+    def _rollback_admission(self, req, seq, exc, announced) -> None:
+        """Unwind a partially-admitted request after a mid-admission
+        failure: every block reference ``seq`` holds returns through
+        the refcount path and the state slot (if taken) is freed, so
+        the pool is exactly as if the admission never started.  A
+        transient pool fault (exhaustion ``RuntimeError``) re-queues
+        the request at the head for the next step; a
+        request-attributable :class:`RequestFault` (e.g. its first
+        token's callback raised mid-prefill) finishes it with
+        ``finish_reason='error'`` instead -- re-queueing after a
+        partial emission would corrupt ``resume_tokens``."""
+        self.pool.release(seq.blocks)
+        seq.blocks = []
+        if seq.slot >= 0:
+            self.pool.free_slot(seq.slot)
+            seq.slot = -1
+        self._c_admit_rollbacks.inc()
+        if isinstance(exc, RequestFault):
+            req.done = True
+            req.finish_reason = "error"
+            if getattr(req, "error", None) is None:
+                req.error = str(exc)
+            self.obs.on_finish(req, "error", seq=seq)
+        else:
+            if announced:
+                # on_admit already opened the trace's running span:
+                # close it like a preemption so the walk stays balanced
+                self.obs.on_preempt(seq)
+            self.waiting.appendleft(req)
 
     def admit_chunked(self) -> None:
         """FCFS *chunked* admission: acquire the prefix-cache hit and a
@@ -343,6 +391,8 @@ class Scheduler:
         assert self.chunk_tokens is not None, \
             "admit_chunked needs Scheduler(chunk_tokens=...)"
         while self.waiting and len(self.running) < self.max_batch:
+            if self.faults.admit_race():
+                break      # injected race: the head loses this step
             req = self.waiting[0]
             if self.pool.slots is not None \
                     and self.pool.slots.free_slots == 0:
@@ -373,7 +423,11 @@ class Scheduler:
             self.waiting.popleft()
             self._blocked_head = None
             if self.pool.slots is not None:
-                seq.slot = self.pool.alloc_slot()
+                try:
+                    seq.slot = self.pool.alloc_slot()
+                except RuntimeError as e:
+                    self._rollback_admission(req, seq, e, False)
+                    break
             self.pool.record_hit(hit, len(tokens))
             seq.admitted_at = self._admit_counter
             self._admit_counter += 1
@@ -536,33 +590,62 @@ class Scheduler:
         self.reclaim_out_of_window()
         if not self.pool.needs_blocks:
             return plan
-        while True:
-            need = sum(self._span_need(s, n) for s, n in plan)
-            if need <= self.pool.free_blocks:
-                break
-            assert len(self.running) > 1, \
-                "pool cannot hold the oldest request (submit gate broken)"
+        # injected preemption storm: evict the youngest as if the pool
+        # were under pressure (recompute restarts reproduce the same
+        # tokens by the seeded-sampling contract, so this only stresses
+        # the warm-restart path, not the math)
+        while self.faults.preempt_storm() and len(self.running) > 1:
             victim = max(self.running, key=lambda s: s.admitted_at)
             self.preempt(victim)
             plan = [(s, n) for s, n in plan if s is not victim]
-        grow = [(s, self.pool.blocks_for(s.length + n)
-                 - (s.freed_prefix + len(s.blocks)))
-                for s, n in plan]
-        grow = [(s, g) for s, g in grow if g > 0]
-        if grow:       # one alloc = one pos-reset scatter per layer
-            ids = self.pool.alloc(sum(g for _, g in grow))
-            k = 0
-            for seq, g in grow:
-                seq.blocks.extend(ids[k:k + g])
-                k += g
-        for seq, n in plan:
-            if seq.length % self.pool.block_size == 0 or not seq.blocks:
+        while True:
+            while True:
+                need = sum(self._span_need(s, n) for s, n in plan)
+                if need <= self.pool.free_blocks:
+                    break
+                assert len(self.running) > 1, \
+                    "pool cannot hold the oldest request " \
+                    "(submit gate broken)"
+                victim = max(self.running, key=lambda s: s.admitted_at)
+                self.preempt(victim)
+                plan = [(s, n) for s, n in plan if s is not victim]
+            grow = [(s, self.pool.blocks_for(s.length + n)
+                     - (s.freed_prefix + len(s.blocks)))
+                    for s, n in plan]
+            grow = [(s, g) for s, g in grow if g > 0]
+            try:
+                if grow:    # one alloc = one pos-reset scatter per layer
+                    ids = self.pool.alloc(sum(g for _, g in grow))
+                    k = 0
+                    for seq, g in grow:
+                        seq.blocks.extend(ids[k:k + g])
+                        k += g
+                for seq, n in plan:
+                    if seq.length % self.pool.block_size == 0 \
+                            or not seq.blocks:
+                        continue
+                    # the partial block the first write lands in (NOT
+                    # blocks[-1] -- a multi-token chunk may have grown
+                    # past it just above)
+                    j = seq.length // self.pool.block_size \
+                        - seq.freed_prefix
+                    if self.pool.refcount(seq.blocks[j]) > 1:
+                        seq.blocks[j] = self.pool.cow(seq.blocks[j])
+            except RuntimeError:
+                # alloc or COW failed AFTER the capacity check (an
+                # injected exhaustion, or eviction pressure from a COW
+                # draw): alloc is atomic and partial grow/COW state is
+                # individually consistent (grown blocks stay owned by
+                # their seqs), so treat it as a shortfall -- preempt the
+                # youngest and retry.  With one request left, surface to
+                # the engine's step containment instead.
+                if len(self.running) <= 1:
+                    raise
+                victim = max(self.running, key=lambda s: s.admitted_at)
+                self.preempt(victim)
+                plan = [(s, n) for s, n in plan if s is not victim]
                 continue
-            # the partial block the first write lands in (NOT blocks[-1]
-            # -- a multi-token chunk may have grown past it just above)
-            j = seq.length // self.pool.block_size - seq.freed_prefix
-            if self.pool.refcount(seq.blocks[j]) > 1:
-                seq.blocks[j] = self.pool.cow(seq.blocks[j])
+            break
         # the step's decode-stall metric, recorded on the FINAL plan
         # (post-preemption): prompt tokens this step co-schedules with
         # at least one running decode.  This is the canonical stall

@@ -315,9 +315,15 @@ def test_walk_every_request_traces_balanced_and_metrics_agree():
     assert reg.value("repro_pool_blocks", state="free") \
         + reg.value("repro_pool_blocks", state="cached") == pool.n_usable
     # lifecycle accounting: everything submitted was finished, queue
-    # waits were observed once per admission, tokens balance
+    # waits were observed once per admission, tokens balance.  The
+    # finished{reason} label set is Request.FINISH_REASONS -- summing
+    # over THE enum (not a hand list) proves no reason escapes it
+    from repro.serving.engine import Request
+    fin = reg.get("repro_requests_finished")
+    assert set(fin._children) <= {(rs,) for rs in Request.FINISH_REASONS}, \
+        (set(fin._children), Request.FINISH_REASONS)
     n_fin = sum(reg.value("repro_requests_finished", reason=rs)
-                for rs in ("length", "cancelled", "rejected"))
+                for rs in Request.FINISH_REASONS)
     assert reg.value("repro_requests_submitted") == len(reqs) == n_fin
     hq = reg.get("repro_request_queue_wait_seconds")
     assert hq.count == reg.value("repro_sched_admissions")

@@ -1,0 +1,184 @@
+"""Nested-precision serving economics (ISSUE 10 tentpole).
+
+Two questions, answered with numbers:
+
+* **What does a narrower lane actually save?**  HBM traffic of the
+  fused quantized linear (:func:`repro.kernels.ops.ap_linear_fused`,
+  decode shape) when serving the top-k plane slice of an 8-bit nested
+  checkpoint, measured two ways:
+
+  - ``hlo_bytes``: loop-aware traffic estimate
+    (:mod:`benchmarks.hlo_analysis`) of the compiled ``reference``-impl
+    graph with the slice taken before the jit boundary -- exactly what
+    the TPU kernel's BlockSpec does: the index map streams only the k
+    kept planes, the dropped planes are never fetched;
+  - ``weight_arg_bytes``: the packed-plane argument footprint itself
+    (``k x ceil(K/32) x N x 4`` bytes), the analytic floor of the
+    weight stream.
+
+  The fused decode linear is weight-bound at decode M, so k=4 must
+  read <= 0.55x the bytes of k=8 (the CI gate; 0.5x is the plane-count
+  floor, the slack is the width-independent activation/output term).
+
+* **What does the tier policy buy under overload?**  A deterministic
+  discrete-event model of the serving loop at 2x sustained overload:
+  requests arrive at half the 8-bit service interval, per-token decode
+  cost proportional to granted bits (the weight-stream bound above),
+  grants frozen at admission by :func:`repro.serving.engine.tier_bits`
+  with a floor.  Reported: makespan, throughput ratio vs a fixed-8-bit
+  run, mean granted bits, grant histogram, peak queue depth -- the
+  policy sheds precision instead of latency, then recovers to full
+  width as the queue drains (the last grants are 8-bit again).
+
+Results go to ``BENCH_nested_precision.json``.  ``--smoke`` shrinks
+the GEMM and the arrival count so the CI job finishes in seconds.
+
+Usage:  PYTHONPATH=src:. python -m benchmarks.nested_precision \
+            [--out BENCH_nested_precision.json] [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import heapq
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import hlo_analysis
+from repro.core import bipolar
+from repro.kernels import ops
+from repro.serving.engine import tier_bits
+
+MAX_BITS, A_BITS = 8, 8
+WIDTHS = (2, 4, 8)
+
+
+# ---------------------------------------------------------------------------
+# Weight-stream savings of a sliced lane
+# ---------------------------------------------------------------------------
+
+def _nested_operands(m, n, k, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.bfloat16)
+    w = ops.quantize_rows(jnp.asarray(rng.standard_normal((n, k)),
+                                      jnp.float32), MAX_BITS, pad_bit=1,
+                          scale_search=True, impl="reference")
+    return x, w
+
+
+def bench_sliced_linear(m, n, k) -> dict:
+    """Fused-linear HBM traffic per served width of ONE checkpoint."""
+    x, w_full = _nested_operands(m, n, k)
+
+    def fused(xx, ww):
+        return ops.ap_linear_fused(xx, ww, a_bits=A_BITS,
+                                   impl="reference")
+
+    widths = {}
+    for kbits in WIDTHS:
+        wk = bipolar.nested_slice(w_full, kbits)
+        comp = jax.jit(fused).lower(x, wk).compile()
+        widths[str(kbits)] = dict(
+            hlo_bytes=float(hlo_analysis.analyze(comp.as_text())["bytes"]),
+            weight_arg_bytes=int(wk.packed.size * wk.packed.dtype.itemsize),
+        )
+    base = widths[str(MAX_BITS)]
+    for rec in widths.values():
+        rec["hlo_over_full"] = rec["hlo_bytes"] / base["hlo_bytes"]
+        rec["weight_over_full"] = (rec["weight_arg_bytes"]
+                                   / base["weight_arg_bytes"])
+    return dict(m=m, n=n, k=k, a_bits=A_BITS, stored_bits=MAX_BITS,
+                widths=widths)
+
+
+# ---------------------------------------------------------------------------
+# Tier policy under sustained overload
+# ---------------------------------------------------------------------------
+
+def simulate_overload(n_reqs: int, *, floor, overload: float = 2.0,
+                      tokens_per_req: int = 32, pressure: int = 4) -> dict:
+    """Discrete-event serving model: one decode lane, per-token cost
+    proportional to granted bits (weight-stream bound), grants frozen
+    at admission.  ``floor=None`` degenerates to fixed-8-bit serving."""
+    unit = 1.0 / MAX_BITS                # time per token per bit
+    svc8 = tokens_per_req * MAX_BITS * unit
+    interval = svc8 / overload
+    arrivals = [i * interval for i in range(n_reqs)]
+    queue: list = []
+    grants, depths = [], []
+    t, i, done = 0.0, 0, 0
+    while done < n_reqs:
+        while i < n_reqs and arrivals[i] <= t:
+            heapq.heappush(queue, (arrivals[i], i))
+            i += 1
+        if not queue:
+            t = arrivals[i]
+            continue
+        _, req = heapq.heappop(queue)
+        depth = len(queue)
+        bits = tier_bits(None, max_bits=MAX_BITS, floor=floor,
+                         queue_depth=depth, pressure=pressure)
+        grants.append(bits)
+        depths.append(depth)
+        t += tokens_per_req * bits * unit
+        done += 1
+    hist = {str(b): grants.count(b) for b in sorted(set(grants))}
+    return dict(n_reqs=n_reqs, overload=overload, floor=floor,
+                makespan=t, throughput=n_reqs / t,
+                mean_bits=float(np.mean(grants)), grant_hist=hist,
+                peak_queue_depth=max(depths), final_grant=grants[-1])
+
+
+def bench_tier_policy(n_reqs: int) -> dict:
+    tiered = simulate_overload(n_reqs, floor=4)
+    fixed = simulate_overload(n_reqs, floor=None)
+    return dict(
+        tiered=tiered, fixed_8bit=fixed,
+        throughput_gain=tiered["throughput"] / fixed["throughput"],
+        queue_depth_ratio=(tiered["peak_queue_depth"]
+                           / max(fixed["peak_queue_depth"], 1)),
+    )
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_nested_precision.json")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(argv)
+    m, n, k = (4, 256, 256) if args.smoke else (4, 1024, 1024)
+    linear = bench_sliced_linear(m, n, k)
+    for kb, rec in sorted(linear["widths"].items(), key=lambda kv: -int(kv[0])):
+        print(f"k={kb}: hlo {rec['hlo_bytes']:.3g} "
+              f"({rec['hlo_over_full']:.3f}x), weight arg "
+              f"{rec['weight_arg_bytes']} ({rec['weight_over_full']:.3f}x)")
+    policy = bench_tier_policy(24 if args.smoke else 256)
+    print(f"2x overload: tiered {policy['tiered']['throughput']:.3f} req/u "
+          f"(mean {policy['tiered']['mean_bits']:.2f} bits, grants "
+          f"{policy['tiered']['grant_hist']}) vs fixed "
+          f"{policy['fixed_8bit']['throughput']:.3f} -> "
+          f"{policy['throughput_gain']:.3f}x, final grant back to "
+          f"{policy['tiered']['final_grant']} bits")
+    out = dict(
+        meta=dict(smoke=bool(args.smoke), stored_bits=MAX_BITS,
+                  a_bits=A_BITS,
+                  note="hlo_bytes: loop-aware traffic of the compiled "
+                       "reference fused linear with the plane slice "
+                       "taken before jit (what the TPU BlockSpec "
+                       "streams); weight_arg_bytes: packed-plane "
+                       "argument footprint; overload sim: per-token "
+                       "cost proportional to granted bits, grants from "
+                       "engine.tier_bits frozen at admission"),
+        fused_linear=linear,
+        overload_2x=policy,
+    )
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -118,6 +118,61 @@ def mse_scale(x: jax.Array, n_bits: int, axis=-1, *,
     return best_s
 
 
+def truncate_values(values: jax.Array, n_bits: int, k: int) -> jax.Array:
+    """Top-``k`` plane prefix of ``n_bits``-bit bipolar values, as k-bit
+    bipolar values (int32).
+
+    Dropping the ``n_bits - k`` least-significant planes of the unsigned
+    bit field is *round-to-nearest* onto the coarse k-bit grid scaled by
+    ``2^{n_bits-k}``: the discarded low bits form an odd remainder of
+    magnitude ``<= 2^{n_bits-k} - 1``, strictly under half the coarse
+    spacing ``2^{n_bits-k+1}`` and never a tie -- which is why a plane
+    slice of a packed tensor matches a direct k-bit quantization at the
+    natural scale ``s * 2^{n_bits-k}`` (the nested-precision parity
+    contract in tests/kernels/test_parity.py)."""
+    if k == n_bits:
+        return values.astype(jnp.int32)
+    return decode(encode(values, n_bits) >> (n_bits - k), k)
+
+
+def nested_width_scales(x: jax.Array, values: jax.Array, n_bits: int,
+                        scale: jax.Array, axis=-1, *,
+                        candidates: int = 15, lo: float = 0.8,
+                        hi: float = 1.2) -> jax.Array:
+    """Per-width dequant scales for a nested (prefix-truncatable) tensor.
+
+    Row ``k-1`` is the scale to dequantize the top-``k`` plane slice of
+    ``values`` (the integers are FIXED by the max-bit grid -- truncation
+    only, no requantization), chosen by a clip search around the natural
+    slice scale ``scale * 2^{n_bits-k}``: sweep ``candidates`` factors in
+    ``[lo, hi]`` and keep, per reduction group, the one minimizing
+    ``||v_k * s - x||^2`` (the fixed-integer analogue of
+    :func:`mse_scale`'s clip search; offline cost only).  Row
+    ``n_bits-1`` is ``scale`` itself, unconditionally -- a full-width
+    slice must be the identity.  Returns ``(n_bits, *scale.shape)``.
+    """
+    xf = x.astype(jnp.float32)
+    base = scale.astype(jnp.float32)
+    rows = []
+    for k in range(1, n_bits + 1):
+        if k == n_bits:
+            rows.append(base)
+            continue
+        vk = truncate_values(values, n_bits, k).astype(jnp.float32)
+        natural = base * float(1 << (n_bits - k))
+        best_s = natural
+        best_e = jnp.full_like(natural, jnp.inf)
+        for c in np.linspace(lo, hi, candidates):
+            s = natural * float(c)
+            err = jnp.sum(jnp.square(vk * s - xf), axis=axis,
+                          keepdims=True)
+            take = err < best_e
+            best_s = jnp.where(take, s, best_s)
+            best_e = jnp.where(take, err, best_e)
+        rows.append(best_s)
+    return jnp.stack(rows, axis=0)
+
+
 # ---------------------------------------------------------------------------
 # Bit-plane decomposition / recovery (paper §3.2 data decomposition step)
 # ---------------------------------------------------------------------------
@@ -220,12 +275,19 @@ class BipolarTensor:
     are concatenated on the leading axis (Fig. 3 step 3) with the reduction
     axis packed 32x into uint32 (step 2).  ``scale`` broadcasts against the
     dequantized tensor.
+
+    ``width_scales`` (optional, ``(n_bits, *scale.shape)``) makes the
+    tensor *nested*: row ``k-1`` is the clip-searched dequant scale for
+    the top-``k`` plane prefix (:func:`nested_width_scales`), so one
+    max-bit checkpoint serves every k <= n_bits via :func:`nested_slice`
+    with no requantization.  Row ``n_bits-1`` equals ``scale``.
     """
     packed: jax.Array
     scale: jax.Array
     n_bits: int = dataclasses.field(metadata=dict(static=True))
     shape: tuple = dataclasses.field(metadata=dict(static=True))
     pack_axis: int = dataclasses.field(metadata=dict(static=True))
+    width_scales: Optional[jax.Array] = None
 
     @property
     def nbytes_packed(self) -> int:
@@ -255,6 +317,40 @@ def quantize_pack(x: jax.Array, n_bits: int, pack_axis: int,
     return BipolarTensor(packed=packed, scale=scale.astype(jnp.float32),
                          n_bits=n_bits, shape=tuple(x.shape),
                          pack_axis=pack_axis if pack_axis >= 0 else x.ndim + pack_axis)
+
+
+def nested_slice(t: BipolarTensor, k: int) -> BipolarTensor:
+    """Top-``k`` plane prefix of a packed tensor as a k-bit tensor.
+
+    :func:`decompose` puts bit ``i`` (LSB first) at plane index ``i``,
+    so the k most-significant planes are the TRAILING k entries of the
+    leading plane axis -- the slice ``packed[n_bits-k:]`` reinterpreted
+    with ``n_bits=k`` is exactly the truncated integers of
+    :func:`truncate_values`.  K-pad columns stay valid: a weight packed
+    with pad bit 1 keeps bit 1 in every remaining plane, decoding to
+    ``+max_value(k)``, which is what :func:`pad_correction` at the
+    sliced widths assumes.  The dequant scale comes from
+    ``width_scales`` when present (clip-searched per width), else the
+    natural ``scale * 2^{n_bits-k}``; the sliced tensor keeps the first
+    k width-scale rows (top-j of top-k == top-j of the original), so
+    slicing composes.  Expects the plane axis leading (``packed`` as
+    stored by :func:`quantize_pack` / ``ops.quantize_rows``; stacked
+    per-layer weights are sliced after the scan peels their unit axis).
+    """
+    m = t.n_bits
+    if k == m:
+        return t
+    if not 1 <= k < m:
+        raise ValueError(f"nested slice width {k} outside [1, {m}]")
+    drop = m - k
+    if t.width_scales is not None:
+        scale = t.width_scales[k - 1]
+        ws = t.width_scales[:k]
+    else:
+        scale = t.scale * float(1 << drop)
+        ws = None
+    return dataclasses.replace(t, packed=t.packed[drop:], scale=scale,
+                               width_scales=ws, n_bits=k)
 
 
 def dequantize(t: BipolarTensor) -> jax.Array:

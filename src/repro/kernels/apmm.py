@@ -50,6 +50,13 @@ writes ``act(gate) * up``) keeps the whole linear in the kernel; every
 epilogue stage round-trips through ``out_dtype`` exactly where the
 unfused composition casts, so fused and unfused outputs are
 *bit-identical* (greedy decode is token-identical by construction).
+
+Nested-precision serving needs no kernel changes: the kernels are
+width-agnostic (``n_a``/``n_b`` are static parameters and the packed
+plane axis is BlockSpec'd whole), so when ``ops`` plane-prefix slices a
+nested weight (``bipolar.nested_slice``) the operand physically shipped
+to the kernel holds only the served ``k`` planes -- HBM weight traffic
+scales with the served width, not the stored one.
 """
 
 from __future__ import annotations

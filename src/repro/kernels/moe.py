@@ -43,6 +43,11 @@ path leaves tiny eps-scale values there; the combine gather never
 reads either, which is what keeps the ``moe_apply`` rewire
 token-identical).
 
+Like the dense APMM kernels, this kernel is width-agnostic: nested-
+precision serving slices the ``(n_bits, E, N, Kw)`` packed expert
+weights to their leading ``k`` planes in ``ops.ap_moe_expert_linear``
+(``w_bits=k``), so the kernel streams only the served planes from HBM.
+
 A second kernel output, the ``(E*G, n_row_tiles)`` int32 live map,
 records which row tiles did work -- the interpret-mode proof of the
 skip path and the source of the skipped-tile fraction in

@@ -117,6 +117,12 @@ def quantize_rows(x: jax.Array, n_bits: int, *, pad_bit: int,
     :func:`bipolar.mse_scale` -- weight preprocessing only); K padded to
     the 32-bit word boundary with the given pad bit (0 for
     activations/LHS, 1 for weights/RHS).
+
+    ``scale_search=True`` additionally fits the per-width nested scales
+    (:func:`bipolar.nested_width_scales`) so every plane prefix of the
+    result is directly servable via :func:`bipolar.nested_slice` -- the
+    any-precision checkpoint contract (offline cost only, like the clip
+    search itself).
     """
     impl = impl or default_impl()
     r, k = x.shape
@@ -125,6 +131,10 @@ def quantize_rows(x: jax.Array, n_bits: int, *, pad_bit: int,
     if scale is None:
         scale = bipolar.absmax_scale(x, n_bits, axis=-1, keepdims=True)
     scale = scale.astype(jnp.float32).reshape(r, 1)
+    width_scales = None
+    if scale_search and n_bits > 1:
+        qv = bipolar.quantize_values(x, n_bits, scale)
+        width_scales = bipolar.nested_width_scales(x, qv, n_bits, scale)
     if impl == "reference":
         q = bipolar.quantize_values(x, n_bits, scale)
         planes = bipolar.decompose(q, n_bits)
@@ -147,7 +157,8 @@ def quantize_rows(x: jax.Array, n_bits: int, *, pad_bit: int,
             xp, sp, n_bits=n_bits, block=(br, bk),
             interpret=(impl == "interpret"))[:, :r, :]
     return BipolarTensor(packed=packed, scale=scale, n_bits=n_bits,
-                         shape=(r, k), pack_axis=1)
+                         shape=(r, k), pack_axis=1,
+                         width_scales=width_scales)
 
 
 # ---------------------------------------------------------------------------
@@ -177,13 +188,20 @@ def _normalize_packed_kw(a: BipolarTensor,
 
 def ap_matmul(a: BipolarTensor, b: BipolarTensor, *,
               variant: str = "fused", impl: str | None = None,
-              out_dtype=jnp.float32, raw: bool = False) -> jax.Array:
+              out_dtype=jnp.float32, raw: bool = False,
+              b_bits: int | None = None) -> jax.Array:
     """NT GEMM of packed tensors: ``Y (M,N) = A (M,K) @ B (N,K)^T``.
 
     ``raw=True`` returns the exact int32 product of the bipolar integer
-    values (no scale dequant).
+    values (no scale dequant).  ``b_bits`` serves a nested B operand at
+    a lower width: only the leading ``b_bits`` plane rows of the packed
+    buffer are shipped to the kernel (:func:`bipolar.nested_slice` --
+    HBM weight traffic scales with the served width, and the reference
+    impl slices the same buffers inside the jitted graph).
     """
     impl = impl or default_impl()
+    if b_bits is not None:
+        b = bipolar.nested_slice(b, b_bits)
     a, b = _normalize_packed_kw(a, b)
     if impl == "reference":
         if raw:
@@ -213,18 +231,21 @@ def ap_matmul(a: BipolarTensor, b: BipolarTensor, *,
 
 def ap_linear(x: jax.Array, w: BipolarTensor, *, a_bits: int,
               variant: str = "fused", impl: str | None = None,
-              out_dtype=None) -> jax.Array:
+              out_dtype=None, w_bits: int | None = None) -> jax.Array:
     """Quantized linear: ``y (..., N) = x (..., K) @ W (N, K)^T``.
 
     Activations are quantized on the fly (per-token absmax, the paper's
-    runtime preprocessing path); weights arrive pre-packed.
+    runtime preprocessing path); weights arrive pre-packed.  ``w_bits``
+    serves a nested weight at a lower width (plane-prefix slice, see
+    :func:`ap_matmul`).
     """
     impl = impl or default_impl()
     out_dtype = out_dtype or x.dtype
     lead = x.shape[:-1]
     k = x.shape[-1]
     xq = quantize_rows(x.reshape(-1, k), a_bits, pad_bit=0, impl=impl)
-    y = ap_matmul(xq, w, variant=variant, impl=impl, out_dtype=out_dtype)
+    y = ap_matmul(xq, w, variant=variant, impl=impl, out_dtype=out_dtype,
+                  b_bits=w_bits)
     return y.reshape(*lead, w.shape[0])
 
 
@@ -234,7 +255,7 @@ def ap_linear_fused(x: jax.Array, w: BipolarTensor, *, a_bits: int,
                     act: str = "none",
                     residual: jax.Array | None = None,
                     variant: str = "fused", impl: str | None = None,
-                    out_dtype=None) -> jax.Array:
+                    out_dtype=None, w_bits: int | None = None) -> jax.Array:
     """One-kernel quantized linear with a fused epilogue (paper §4.2
     taken to its conclusion: preprocessing AND recovery in fast memory).
 
@@ -258,9 +279,19 @@ def ap_linear_fused(x: jax.Array, w: BipolarTensor, *, a_bits: int,
     :func:`repro.kernels.ref.ap_linear_fused_ref` (quantize to values,
     integer GEMM, same epilogue -- no packed activation buffer in the
     graph at all).
+
+    ``w_bits`` serves nested weights at a lower width: both GEMM
+    operands (``w`` and ``w2``) are plane-prefix sliced up front
+    (:func:`bipolar.nested_slice`), so the pallas/interpret kernel
+    physically streams only ``w_bits`` planes from HBM and the
+    reference impl slices the same packed buffers in-graph.
     """
     impl = impl or default_impl()
     out_dtype = out_dtype or x.dtype
+    if w_bits is not None:
+        w = bipolar.nested_slice(w, w_bits)
+        if w2 is not None:
+            w2 = bipolar.nested_slice(w2, w_bits)
     lead = x.shape[:-1]
     k = x.shape[-1]
     n = w.shape[0]
@@ -331,7 +362,8 @@ def ap_moe_expert_linear(x: jax.Array, w: BipolarTensor, *,
                          w2: BipolarTensor | None = None,
                          act: str = "none", variant: str = "fused",
                          impl: str | None = None, out_dtype=None,
-                         with_stats: bool = False):
+                         with_stats: bool = False,
+                         w_bits: int | None = None):
     """Grouped quantized MoE expert linear (one launch for all experts).
 
     ``y (E, C, N) = epi(Q(x) (E, C, K) @ W (E, N, K)^T)`` where ``C =
@@ -364,9 +396,17 @@ def ap_moe_expert_linear(x: jax.Array, w: BipolarTensor, *,
     (kernel-reported for pallas/interpret, analytic for reference --
     the interpret parity test asserting they agree is the skip-path
     proof).
+
+    ``w_bits`` serves nested expert weights at a lower width (leading
+    plane-prefix slice of the ``(n_bits, E, N, Kw)`` packed buffers,
+    see :func:`ap_linear_fused`).
     """
     impl = impl or default_impl()
     out_dtype = out_dtype or x.dtype
+    if w_bits is not None:
+        w = bipolar.nested_slice(w, w_bits)
+        if w2 is not None:
+            w2 = bipolar.nested_slice(w2, w_bits)
     e, c, k = x.shape
     g = counts.shape[1]
     assert c % g == 0, (c, g)

@@ -36,16 +36,79 @@ class QuantConfig:
     the GEMM prologue, bias/activation/residual epilogue, dual-GEMM
     gate/up for SwiGLU.  Bit-identical outputs to the unfused two-launch
     path -- ``False`` only for A/B benchmarking the unfused baseline.
+
+    ``nested_bits`` serves a *nested* checkpoint at a lower width than
+    it was packed at: weights stay stored once at ``w_bits`` with
+    per-width scale vectors, and every quantized GEMM ships only the
+    leading ``nested_bits`` bit planes (``bipolar.nested_slice`` -- no
+    requantization, weight HBM traffic scales with the served width).
+    ``None`` serves the full stored width.  The engine's per-request
+    precision lanes are realized as ``dataclasses.replace(quant,
+    nested_bits=k)`` per lane.
+
+    ``precision_floor`` is the load-adaptive tier policy's lower bound:
+    under queue pressure the engine may degrade a request's served
+    width down to -- never below -- this floor (``None`` disables
+    degradation entirely).  See ``engine.tier_bits``.
+
+    All bit-width fields are validated up front (descriptive
+    ``ValueError`` instead of a shape error deep inside pack/dispatch).
     """
     w_bits: Optional[int] = None
     a_bits: int = 8
     variant: str = "fused"          # "fused" | "bitserial" (paper-faithful)
     kv_bits: Optional[int] = None   # bipolar KV-cache bits (1..8)
     fused_linear: bool = True       # one-kernel linear w/ fused epilogue
+    nested_bits: Optional[int] = None   # served weight width (<= w_bits)
+    precision_floor: Optional[int] = None  # tier-policy lower bound
+
+    def __post_init__(self):
+        def _chk(name, v, lo, hi):
+            if v is not None and not (isinstance(v, int)
+                                      and lo <= v <= hi):
+                raise ValueError(
+                    f"QuantConfig.{name}={v!r} out of range: expected an "
+                    f"int in [{lo}, {hi}] or None")
+        _chk("w_bits", self.w_bits, 1, 8)
+        _chk("a_bits", self.a_bits, 1, 8)
+        _chk("kv_bits", self.kv_bits, 1, 8)
+        _chk("nested_bits", self.nested_bits, 1, 8)
+        _chk("precision_floor", self.precision_floor, 1, 8)
+        if self.a_bits is None:
+            raise ValueError("QuantConfig.a_bits must be set (1..8)")
+        if self.variant not in ("fused", "bitserial"):
+            raise ValueError(
+                f"QuantConfig.variant={self.variant!r}: expected 'fused' "
+                f"or 'bitserial'")
+        if self.nested_bits is not None:
+            if self.w_bits is None:
+                raise ValueError(
+                    "QuantConfig.nested_bits requires w_bits (the stored "
+                    "max width of the nested checkpoint)")
+            if self.nested_bits > self.w_bits:
+                raise ValueError(
+                    f"QuantConfig.nested_bits={self.nested_bits} exceeds "
+                    f"the stored width w_bits={self.w_bits}: a nested "
+                    f"slice can only drop planes, not add them")
+        if self.precision_floor is not None:
+            top = self.nested_bits if self.nested_bits is not None \
+                else self.w_bits
+            if top is not None and self.precision_floor > top:
+                raise ValueError(
+                    f"QuantConfig.precision_floor={self.precision_floor} "
+                    f"> max served width {top}: the tier policy could "
+                    f"never satisfy the floor")
 
     @property
     def enabled(self) -> bool:
         return self.w_bits is not None
+
+    @property
+    def serve_bits(self) -> Optional[int]:
+        """Weight width actually served: ``nested_bits`` when nested
+        slicing is active, else the stored ``w_bits``."""
+        return self.nested_bits if self.nested_bits is not None \
+            else self.w_bits
 
 
 def effective_kv_bits(cfg: "ModelConfig",

@@ -84,11 +84,13 @@ def linear_apply(params: dict, x: jax.Array, *, quant=None,
     if _use_fused_linear(w, quant):
         return ops.ap_linear_fused(x, w, a_bits=quant.a_bits, act=act,
                                    residual=residual,
-                                   variant=quant.variant, out_dtype=x.dtype)
+                                   variant=quant.variant, out_dtype=x.dtype,
+                                   w_bits=quant.nested_bits)
     if isinstance(w, BipolarTensor):
         assert quant is not None and quant.enabled
         y = ops.ap_linear(x, w, a_bits=quant.a_bits,
-                          variant=quant.variant, out_dtype=x.dtype)
+                          variant=quant.variant, out_dtype=x.dtype,
+                          w_bits=quant.nested_bits)
     else:
         y = jnp.einsum("...k,nk->...n", x, w.astype(x.dtype))
     return _epilogue(y, act, residual, x.dtype)
@@ -640,7 +642,7 @@ def mlp_apply(params: dict, x: jax.Array, cfg: ModelConfig, quant=None,
             h = ops.ap_linear_fused(
                 x, params["w_gate"]["w"], w2=params["w_up"]["w"],
                 a_bits=quant.a_bits, act="silu", variant=quant.variant,
-                out_dtype=x.dtype)
+                out_dtype=x.dtype, w_bits=quant.nested_bits)
         else:
             up = linear_apply(params["w_up"], x, quant=quant)
             gate = linear_apply(params["w_gate"], x, quant=quant)
@@ -707,6 +709,9 @@ def _expert_matmul(w, x_eck, quant=None, pre=None, out_dtype=None):
     from repro.core import bipolar as bp
     od = out_dtype if out_dtype is not None else x_eck.dtype
     if isinstance(w, BipolarTensor):
+        nested = getattr(quant, "nested_bits", None)
+        if nested is not None:
+            w = bp.nested_slice(w, nested)
         kp = w.packed.shape[-1] * bp.PACK_WIDTH
         k = w.shape[-1]
         planes = bp.unpack_planes(w.packed, -1, kp)       # (n, E, N, Kp)
@@ -812,10 +817,11 @@ def moe_apply(params: dict, x: jax.Array, cfg: ModelConfig, quant=None):
         h = ops.ap_moe_expert_linear(
             disp_e, params["w_gate"], w2=params["w_up"], counts=counts_e,
             a_bits=quant.a_bits, act="silu", variant=quant.variant,
-            out_dtype=x.dtype)
+            out_dtype=x.dtype, w_bits=quant.nested_bits)
         out = ops.ap_moe_expert_linear(
             h, params["w_down"], counts=counts_e, a_bits=quant.a_bits,
-            variant=quant.variant, out_dtype=x.dtype)           # (E, G*C, d)
+            variant=quant.variant, out_dtype=x.dtype,
+            w_bits=quant.nested_bits)                           # (E, G*C, d)
     elif quantized:
         # legacy batched-over-E oracle for the grouped kernel: gate and
         # up share one quantized-activation stream, the dual epilogue

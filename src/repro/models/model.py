@@ -497,6 +497,12 @@ def _quantize_leaf(w: jax.Array, qcfg: QuantConfig,
     Stacked:   leading dim u = scan units; packed ``(u, n_bits, *rest, Kw)``
     and static shape = per-unit shape ``w.shape[1:]`` (what apply code sees
     after the scan slice).
+
+    The per-width nested scales ride along the same way (unstacked
+    ``(n_bits, *lead, N, 1)``; stacked ``(u, n_bits, *rest, 1)``), so a
+    scan slice -- which peels the unit axis off every array leaf -- always
+    hands ops a plane-leading tensor that ``bipolar.nested_slice`` can
+    serve at any width k <= w_bits.
     """
     shape = tuple(w.shape)
     w2 = w.reshape(-1, shape[-1]).astype(jnp.float32)
@@ -505,11 +511,18 @@ def _quantize_leaf(w: jax.Array, qcfg: QuantConfig,
     kw = t.packed.shape[-1]
     packed = t.packed.reshape(qcfg.w_bits, *shape[:-1], kw)
     scale = t.scale.reshape(*shape[:-1], 1)
+    width_scales = None
+    if t.width_scales is not None:
+        width_scales = t.width_scales.reshape(
+            t.n_bits, *shape[:-1], 1)
     if stacked:
         packed = jnp.moveaxis(packed, 0, 1)  # (u, n_bits, *rest, Kw)
+        if width_scales is not None:
+            width_scales = jnp.moveaxis(width_scales, 0, 1)
         static_shape = shape[1:]
     else:
         static_shape = shape
     return BipolarTensor(packed=packed, scale=scale, n_bits=qcfg.w_bits,
                          shape=static_shape,
-                         pack_axis=len(static_shape) - 1)
+                         pack_axis=len(static_shape) - 1,
+                         width_scales=width_scales)

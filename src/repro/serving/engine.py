@@ -86,6 +86,21 @@ seeded fault schedule through the pool, scheduler, and engine
 the above; the default ``NULL_FAULTS`` twin keeps the hot path
 token-identical with faults off.
 
+**Nested precision** (``Request.precision``, paged): a checkpoint packed
+at ``quant.w_bits`` with per-width scales serves any width ``k <=
+w_bits`` by reading only the leading ``k`` bit planes
+(:func:`repro.core.bipolar.nested_slice` -- no repacking, weight HBM
+traffic scales with ``k``).  Each request may ask for its own width;
+:func:`tier_bits` resolves it against the configured
+``quant.precision_floor`` load-adaptive policy (bits shed under queue
+pressure, floor-clamped, restored as the queue drains) and the result
+is **frozen at first admission** -- precision never changes
+mid-request, preemption re-admits at the same bits.  The step loop
+groups lanes per precision (quant is jit-static: one compiled program
+per served width) and the prefix cache salts its chain hashes with the
+lane's bits, so equal prompts share KV only at equal precision.  Tokens
+emitted per width surface as ``repro_engine_precision{bits}``.
+
 Serving uses quantized packed weights (the paper's technique); pass
 ``quant=cfg.quant`` after :func:`repro.models.model.quantize_params`.
 """
@@ -223,6 +238,29 @@ def prefill_bucket(s: int, cap: int, floor: int = 8) -> int:
     return min(_next_pow2(s, floor), cap)
 
 
+def tier_bits(requested: Optional[int], *, max_bits: int,
+              floor: Optional[int] = None, queue_depth: int = 0,
+              pressure: int = 4) -> int:
+    """Resolve one request's served weight width (bits).
+
+    ``requested`` (None = full width) is capped at ``max_bits``, the
+    checkpoint's stored width -- a nested checkpoint can serve fewer
+    planes than it stores, never more.  Without a ``floor`` the request
+    gets exactly what it asked for (no load adaptation).  With one, the
+    policy is load-adaptive: every ``pressure`` waiting requests shed
+    one bit off the grant, clamped at the floor -- bulk lanes degrade
+    under overload and recover as the queue drains (each *new*
+    admission re-reads the depth; granted requests keep their bits).
+    A request explicitly asking for less than the floor is honored:
+    the floor bounds degradation, not choice.
+    """
+    bits = min(requested or max_bits, max_bits)
+    if floor is None:
+        return bits
+    lo = min(floor, bits)
+    return max(lo, bits - queue_depth // max(pressure, 1))
+
+
 # ---------------------------------------------------------------------------
 # Requests and per-request state
 # ---------------------------------------------------------------------------
@@ -239,6 +277,11 @@ class Request:                      # must never compare prompt arrays
                                     # engine assigns a distinct seed at
                                     # submit (identical prompts still
                                     # sample diverse completions)
+    precision: Optional[int] = None  # requested weight width (bits) for
+                                     # nested-precision serving; capped
+                                     # at quant.w_bits, load-adapted by
+                                     # tier_bits, frozen at admission.
+                                     # None: the engine's full width
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
     error: Optional[str] = None     # rejection / quarantine detail
@@ -408,6 +451,10 @@ class Engine:
         self.n_slots, self.max_len = n_slots, max_len
         self.paged = paged
         self.steps = 0
+        # per-width QuantConfig cache (nested-precision serving): the
+        # jitted steps treat quant as static, so each served width is
+        # one compiled program, reused across steps
+        self._quant_cache: dict = {}
         self._seed_counter = 0      # default per-request sampling seeds
         # fault facade (repro.serving.faults): one seeded schedule shared
         # by the pool, scheduler, and engine; NULL_FAULTS (default) is
@@ -497,10 +544,17 @@ class Engine:
                 # registry, so report() snapshots work with metrics off
                 enc_len=enc, metrics=self.obs.registry,
                 faults=self.faults)
+            # nested-precision serving needs packed weights to slice;
+            # without w_bits every lane runs the configured quant and
+            # the scheduler stays unsalted (pre-nested behavior)
+            tiered = quant is not None and quant.w_bits is not None
             self.scheduler = Scheduler(self.pool, max_len=max_len,
                                        max_batch=self.max_batch,
                                        chunk_tokens=self.chunk_tokens,
-                                       obs=self.obs)
+                                       obs=self.obs,
+                                       precision_policy=(
+                                           self._tier_policy if tiered
+                                           else None))
             self.n_batch_blocks = max_len // block_size   # table width
         else:
             self.caches = M.init_caches(cfg, n_slots, max_len, quant=quant)
@@ -530,6 +584,12 @@ class Engine:
         self._g_retry_after = reg.gauge(
             "repro_sched_shed_retry_after",
             "retry_after hint attached to the most recent shed (s)")
+        self._c_precision = reg.counter(
+            "repro_engine_precision",
+            "output tokens emitted per effective serving precision "
+            "(weight bits; 'full' = unquantized weights)",
+            labelnames=("bits",))
+        self._precision_children: dict = {}
         self.faults.bind(reg)
 
     # -- request lifecycle -------------------------------------------------
@@ -583,6 +643,44 @@ class Engine:
         self._c_shed.inc()
         self._g_retry_after.set(req.retry_after)
         self.obs.on_finish(req, "rejected")
+
+    # -- nested-precision lanes --------------------------------------------
+    def _tier_policy(self, req: Request) -> int:
+        """Scheduler admission hook: resolve the request's served width
+        through :func:`tier_bits` against the queue depth *now*, and
+        freeze it on the request -- a preempted request re-admits at
+        the SAME bits whatever the queue looks like by then (precision
+        never changes mid-request, the tier property suite's
+        invariant)."""
+        frozen = getattr(req, "_tier_bits", None)
+        if frozen is not None:
+            return frozen
+        q = self.quant
+        bits = tier_bits(getattr(req, "precision", None),
+                         max_bits=q.w_bits,
+                         floor=q.precision_floor,
+                         queue_depth=len(self.scheduler.waiting))
+        req._tier_bits = bits
+        return bits
+
+    def _quant_for(self, bits: Optional[int]) -> Optional[QuantConfig]:
+        """QuantConfig for one precision lane, cached per width.
+
+        Full-width lanes reuse ``self.quant`` verbatim (same static jit
+        key as pre-nested serving).  Narrower lanes get a cached
+        ``nested_bits=bits`` copy; the floor is dropped -- it already
+        did its job in :meth:`_tier_policy`, and a request granted
+        bits below the configured floor (explicitly requested) must
+        still validate."""
+        q = self.quant
+        if bits is None or q is None or bits == q.serve_bits:
+            return q
+        cached = self._quant_cache.get(bits)
+        if cached is None:
+            cached = dataclasses.replace(q, nested_bits=bits,
+                                         precision_floor=None)
+            self._quant_cache[bits] = cached
+        return cached
 
     def cancel(self, req: Request) -> bool:
         """Abort ``req``: no further tokens are emitted and no further
@@ -647,6 +745,15 @@ class Engine:
         a supported pattern and raises nothing)."""
         seq.req.out.append(tok)
         self.obs.on_token(seq.req, tok)
+        bits = getattr(seq, "precision", None)
+        if bits is None:
+            q = self.quant
+            bits = q.serve_bits if q is not None and q.w_bits else "full"
+        child = self._precision_children.get(bits)
+        if child is None:
+            child = self._c_precision.labels(bits=str(bits))
+            self._precision_children[bits] = child
+        child.inc()
         if self.faults.callback_error(seq.req):
             raise RequestFault(
                 f"injected on_token failure at token "
@@ -1002,14 +1109,15 @@ class Engine:
                  if self.pool.slots is not None else None)
         caches = self.pool.step_caches(
             tables, np.asarray([start], np.int32), slots=slots)
+        quant = self._quant_for(getattr(seq, "precision", None))
         if self._moe_telemetry:
             logits, caches, mst = prefill_step_bucketed(
-                self.params, batch, caches, self.cfg, self.quant,
+                self.params, batch, caches, self.cfg, quant,
                 moe_stats=True)
             self.obs.on_moe(mst)
         else:
             logits, caches = prefill_step_bucketed(
-                self.params, batch, caches, self.cfg, self.quant)
+                self.params, batch, caches, self.cfg, quant)
         self.pool.absorb(caches)
         return logits
 
@@ -1097,9 +1205,37 @@ class Engine:
                 rows[i] = logits[j]
         return rows
 
-    def _decode_forward(self, running) -> np.ndarray:
-        """One bucketed ``(B, 1)`` decode dispatch over ``running``;
-        returns the (bucketed) f32 logits rows."""
+    @staticmethod
+    def _precision_groups(seqs, key):
+        """Distinct served widths among ``seqs`` (via ``key``), widest
+        first -- a stable grouping order so mixed-precision steps
+        dispatch deterministically."""
+        return sorted({key(s) for s in seqs},
+                      key=lambda b: (b is None, -(b or 0)))
+
+    def _decode_forward(self, running):
+        """Decode forward over ``running``, grouped per served
+        precision: quant is jit-static, so each width is its own
+        compiled program and a mixed batch dispatches once per distinct
+        width over that width's lanes (per-lane plane masks).  A
+        homogeneous batch -- the common case, and every pre-nested
+        config -- is exactly one dispatch, unchanged.  Returns logits
+        rows indexable by position in ``running``."""
+        groups = self._precision_groups(running, lambda s: s.precision)
+        if len(groups) <= 1:
+            return self._decode_dispatch(running)
+        rows: list = [None] * len(running)
+        for bits in groups:
+            idx = [i for i, s in enumerate(running) if s.precision == bits]
+            logits = self._decode_dispatch([running[i] for i in idx])
+            for j, i in enumerate(idx):
+                rows[i] = logits[j]
+        return rows
+
+    def _decode_dispatch(self, running) -> np.ndarray:
+        """One bucketed ``(B, 1)`` decode dispatch over ``running``
+        (all lanes at one served precision); returns the (bucketed)
+        f32 logits rows."""
         bb = self._decode_bucket(len(running))
         # bucket the table width too: the paged kernel's grid walks one
         # iteration per table entry, so a full-width (max_len/block_size)
@@ -1131,18 +1267,37 @@ class Engine:
         caches = self.pool.step_caches(
             tables, lens, block_offsets=offsets,
             slots=slot_ids if self.pool.slots is not None else None)
+        quant = self._quant_for(running[0].precision)
         if self._moe_telemetry:
             logits, caches, mst = serve_step(self.params, batch, caches,
-                                             self.cfg, self.quant,
+                                             self.cfg, quant,
                                              moe_stats=True)
             self.obs.on_moe(mst)
         else:
             logits, caches = serve_step(self.params, batch, caches,
-                                        self.cfg, self.quant)
+                                        self.cfg, quant)
         self.pool.absorb(caches)
         return np.asarray(logits, np.float32)
 
     def _fused_forward(self, plan) -> list:
+        """Fused decode + chunk-prefill forward, grouped per served
+        precision like :meth:`_decode_forward`: one
+        :meth:`_fused_dispatch` per distinct width over that width's
+        plan entries.  Homogeneous plans (every pre-nested config) fuse
+        into exactly ONE dispatch, unchanged."""
+        groups = self._precision_groups(plan, lambda e: e[0].precision)
+        if len(groups) <= 1:
+            return self._fused_dispatch(plan)
+        rows: list = [None] * len(plan)
+        for bits in groups:
+            idx = [i for i, (s, _) in enumerate(plan)
+                   if s.precision == bits]
+            sub = self._fused_dispatch([plan[i] for i in idx])
+            for j, i in enumerate(idx):
+                rows[i] = sub[j]
+        return rows
+
+    def _fused_dispatch(self, plan) -> list:
         """ONE dispatch for a mixed decode + chunk-prefill step.
 
         Decode lanes carry 1 real token, chunk lanes up to
@@ -1183,14 +1338,15 @@ class Engine:
                  "positions": jnp.asarray(pos),
                  "last_idx": jnp.asarray(last, jnp.int32)}
         caches = self.pool.step_caches(tables, lens, block_offsets=offsets)
+        quant = self._quant_for(plan[0][0].precision)
         if self._moe_telemetry:
             logits, caches, mst = prefill_step_bucketed(
-                self.params, batch, caches, self.cfg, self.quant,
+                self.params, batch, caches, self.cfg, quant,
                 moe_stats=True)
             self.obs.on_moe(mst)
         else:
             logits, caches = prefill_step_bucketed(
-                self.params, batch, caches, self.cfg, self.quant)
+                self.params, batch, caches, self.cfg, quant)
         self.pool.absorb(caches)
         logits = np.asarray(logits, np.float32)
         return [logits[i] for i in range(len(plan))]

@@ -126,6 +126,18 @@ def _chain_hash(prev: int, tokens: tuple) -> int:
     return hash((prev, tokens))
 
 
+def _chain_root(salt=None) -> int:
+    """Root of a prompt chain's hash walk.  ``salt`` (the serving
+    precision, in nested-weight serving) partitions the prefix index:
+    equal prompts registered under different salts share nothing -- a
+    4-bit lane must never warm-start from KV a request computed through
+    8-bit weights, whose logits (and thus cached values under quantized
+    KV re-read) belong to a different effective model."""
+    if salt is None:
+        return _CHAIN_ROOT
+    return _chain_hash(_CHAIN_ROOT, ("precision-salt", int(salt)))
+
+
 def needs_blocks(cfg: ModelConfig) -> bool:
     """True when the decoder owns at least one self-attention KV stream
     (pageable in token blocks).  Pure-SSM archs have none -- their pool
@@ -678,8 +690,13 @@ class PagedKVPool:
         self._free.append(bid)
 
     # -- prefix index --------------------------------------------------------
-    def acquire_prefix(self, tokens) -> PrefixHit:
+    def acquire_prefix(self, tokens, *, salt=None) -> PrefixHit:
         """Longest cached prefix of ``tokens`` whose KV is resident.
+
+        ``salt`` must match the salt the chain was registered under
+        (:func:`_chain_root`): nested-precision serving salts with the
+        request's served bits, so lanes only share KV at equal
+        precision.
 
         Walks block-size chunks of the prompt chain through the full
         index, then probes for a cached partial tail block continuing
@@ -695,7 +712,7 @@ class PagedKVPool:
         tokens = np.asarray(tokens)
         n = len(tokens)
         ids: list = []
-        h = _CHAIN_ROOT
+        h = _chain_root(salt)
         covered = 0
         bs = self.block_size
         if self.prefix_cache:
@@ -739,7 +756,8 @@ class PagedKVPool:
             self._c_hit_tokens.inc(hit.cached_len)
 
     def register_chain(self, tokens, block_ids,
-                       memo: Optional[ChainMemo] = None) -> None:
+                       memo: Optional[ChainMemo] = None,
+                       salt=None) -> None:
         """Index ``block_ids`` under the chain hashes of ``tokens``.
 
         ``block_ids[j]`` must hold the KV of ``tokens[j*bs:(j+1)*bs]``
@@ -753,14 +771,19 @@ class PagedKVPool:
         tokens, ids and indexing outcome are immutable while the owner
         holds its references -- so repeated registration of a growing
         chain (every release/finish/preempt) hashes only the *new*
-        blocks instead of re-walking the whole chain."""
+        blocks instead of re-walking the whole chain.
+
+        ``salt`` must equal the owner's :meth:`acquire_prefix` salt --
+        the chain lands in that salt's partition of the index.  A memo
+        that has advanced past block 0 already carries the salted hash,
+        so only the fresh walk consults ``salt``."""
         if not self.prefix_cache:
             return
         self.version += 1
         tokens = np.asarray(tokens)
         bs = self.block_size
-        start, h = 0, _CHAIN_ROOT
-        if memo is not None:
+        start, h = 0, _chain_root(salt)
+        if memo is not None and memo.n_full:
             start, h = min(memo.n_full, len(block_ids)), memo.h
         for j in range(start, len(block_ids)):
             bid = int(block_ids[j])

@@ -88,6 +88,12 @@ class SequenceState:                   # removed from lists by object
     freed_prefix: int = 0
     # state slot (SSM conv+state / enc-dec cross rows); -1 = none
     slot: int = -1
+    # served weight width (bits), resolved by the engine's tier policy
+    # at FIRST admission and frozen on the request (precision never
+    # changes mid-request; preemption re-admits at the same bits).
+    # Salts every prefix-cache chain op below, so equal prompts share
+    # KV only at equal precision.  None = the engine's configured width
+    precision: Optional[int] = None
     # resume point for pool.register_chain: full blocks already indexed
     # by this owner are skipped, so chain bookkeeping on every
     # finish/preempt costs O(new blocks), not O(chain length)
@@ -151,9 +157,16 @@ class Scheduler:
 
     def __init__(self, pool: PagedKVPool, *, max_len: int, max_batch: int,
                  chunk_tokens: Optional[int] = None, obs=None,
-                 tail_compaction: bool = True, faults=None):
+                 tail_compaction: bool = True, faults=None,
+                 precision_policy=None):
         assert chunk_tokens is None or chunk_tokens >= 1, chunk_tokens
         self.pool = pool
+        # nested-precision serving: ``precision_policy(req) -> bits``
+        # resolves a request's served weight width at admission (the
+        # engine passes its load-adaptive tier policy).  None keeps
+        # every sequence at the configured width, unsalted -- the
+        # pre-nested behavior, bit for bit
+        self.precision_policy = precision_policy
         # fault facade: defaults to the pool's injector so engine-built
         # stacks share ONE seeded schedule across all three subsystems
         self.faults = faults if faults is not None else pool.faults
@@ -283,8 +296,10 @@ class Scheduler:
                     and self._blocked_head[1] == self.pool.version:
                 break      # nothing changed since this head last failed
             seq = SequenceState(req=req)
+            if self.precision_policy is not None:
+                seq.precision = self.precision_policy(req)
             tokens = seq.resume_tokens()
-            hit = self.pool.acquire_prefix(tokens)
+            hit = self.pool.acquire_prefix(tokens, salt=seq.precision)
             # a shared partial tail must be copied before the suffix
             # writes into it (COW); sole-reference tails extend in place
             cow = hit.partial and self.pool.refcount(hit.ids[-1]) > 1
@@ -338,7 +353,8 @@ class Scheduler:
                                  t0, obs.t())
                 obs.on_decode_begin(seq)
                 self.pool.register_chain(tokens, seq.blocks,
-                                         memo=seq.chain_memo)
+                                         memo=seq.chain_memo,
+                                         salt=seq.precision)
                 # a long prompt's leading blocks may already be fully out
                 # of the attention window: return them before decode
                 self._reclaim_seq(seq)
@@ -402,8 +418,10 @@ class Scheduler:
                     and self._blocked_head[1] == self.pool.version:
                 break      # nothing changed since this head last failed
             seq = SequenceState(req=req)
+            if self.precision_policy is not None:
+                seq.precision = self.precision_policy(req)
             tokens = seq.resume_tokens()
-            hit = self.pool.acquire_prefix(tokens)
+            hit = self.pool.acquire_prefix(tokens, salt=seq.precision)
             seq.blocks = list(hit.ids)
             seq.cached_len = seq.length = hit.cached_len
             seq.pending = tokens
@@ -667,7 +685,8 @@ class Scheduler:
         (if any) returns to the slot pool."""
         if seq.freed_prefix == 0:
             self.pool.register_chain(seq.token_chain(), seq.blocks,
-                                     memo=seq.chain_memo)
+                                     memo=seq.chain_memo,
+                                     salt=seq.precision)
         self.pool.release(seq.blocks)
         seq.blocks = []
         if seq.slot >= 0:
@@ -693,7 +712,8 @@ class Scheduler:
         :meth:`_release_seq`.  O(new blocks) via the chain memo."""
         if seq.freed_prefix == 0:
             self.pool.register_chain(seq.token_chain(), seq.blocks,
-                                     memo=seq.chain_memo)
+                                     memo=seq.chain_memo,
+                                     salt=seq.precision)
 
     # -- completion ----------------------------------------------------------
     def finish(self, seq: SequenceState, reason: str = "length") -> None:

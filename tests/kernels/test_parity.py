@@ -8,6 +8,9 @@ correctness runs (`reference`), kernel-body debugging (`interpret`) and
 TPU serving (`pallas`) all compute the same function.
 """
 
+import dataclasses
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -142,3 +145,173 @@ def test_kv_bits_degrade_monotonically():
     e8, _, _ = _kv_error(8)
     assert e8 <= e4 <= e2, (e8, e4, e2)
     assert e8 < 0.02, e8
+
+
+# --- nested-precision slice parity (any-precision checkpoints) -------------
+#
+# One checkpoint packed at NEST_M bits with per-width scales
+# (ops.pack_weight -> bipolar.nested_width_scales) must serve every
+# width k <= NEST_M by plane-prefix slicing: the k-plane slice is
+# BIT-identical on the integer core -- truncating to the top-k planes IS
+# round-to-nearest on the coarse grid (the odd-remainder argument in
+# bipolar.truncate_values) -- and tolerance-identical through the
+# dequant epilogues, whose only difference is float summation order.
+# The oracle is a DIRECT quantization at k bits on the same grid: the
+# natural coarse scale (base * 2^(m-k)) fixes the integers, the
+# clip-searched per-width scale replaces the dequant scale.
+
+NEST_M = 8
+NESTED_KS = list(range(1, NEST_M + 1))
+# the pallas path runs the same kernel body interpret executes; off-TPU
+# it cannot lower, so the three-impl matrix skips it there
+NESTED_IMPLS = [
+    "reference", "interpret",
+    pytest.param("pallas", marks=pytest.mark.skipif(
+        jax.default_backend() != "tpu", reason="pallas needs a TPU")),
+]
+
+
+def _nested_weight(n, k):
+    w = jnp.asarray(RNG.standard_normal((n, k)), jnp.float32)
+    return w, ops.pack_weight(w, NEST_M, impl="reference")
+
+
+def _direct_at(wt, w, kbits):
+    """Quantize ``w`` directly at ``kbits`` on the max-bit grid."""
+    natural = wt.scale * float(1 << (NEST_M - kbits))
+    direct = ops.quantize_rows(w, kbits, pad_bit=1, scale=natural,
+                               impl="reference")
+    return dataclasses.replace(direct,
+                               scale=wt.width_scales[kbits - 1],
+                               width_scales=wt.width_scales[:kbits])
+
+
+@pytest.mark.parametrize("kbits", NESTED_KS)
+@pytest.mark.parametrize("kdim", KS)            # word-aligned and odd K
+@pytest.mark.parametrize("impl", NESTED_IMPLS)
+def test_nested_slice_integer_core_bit_identical(kbits, kdim, impl):
+    """``ap_matmul(a, w, b_bits=k, raw=True)`` -- the kernel reads only
+    the leading k planes -- equals the raw GEMM against a direct k-bit
+    quantization, bit for bit, at odd M/N and both K alignments."""
+    a = jnp.asarray(RNG.standard_normal((15, kdim)), jnp.float32)
+    at = ops.quantize_rows(a, 8, pad_bit=0, impl="reference")
+    w, wt = _nested_weight(19, kdim)
+    direct = _direct_at(wt, w, kbits)
+    y_slice = np.asarray(ops.ap_matmul(at, wt, b_bits=kbits, raw=True,
+                                       impl=impl))
+    y_direct = np.asarray(ops.ap_matmul(at, direct, raw=True, impl=impl))
+    np.testing.assert_array_equal(y_slice, y_direct)
+
+
+@pytest.mark.parametrize("kbits", NESTED_KS)
+@pytest.mark.parametrize("impl", NESTED_IMPLS)
+def test_nested_slice_linear_fused_matches_direct(kbits, impl):
+    """``ap_linear_fused(..., w_bits=k)`` on the max-bit checkpoint ==
+    the same op on a direct k-bit quantization with the same per-width
+    scale, in single-GEMM and dual-GEMM (gate/up silu) modes, at odd
+    M/N/K.  Same integer core (bit-identical above), so any difference
+    is float epilogue order -> tight tolerance."""
+    kdim = 67
+    x = jnp.asarray(RNG.standard_normal((3, 5, kdim)), jnp.float32)
+    w, wt = _nested_weight(19, kdim)
+    w2, wt2 = _nested_weight(19, kdim)
+    res = jnp.asarray(RNG.standard_normal((3, 5, 19)), jnp.float32)
+    for kw_direct, kw_slice in (
+            ({}, {}),
+            (dict(w2=_direct_at(wt2, w2, kbits), act="silu", residual=res),
+             dict(w2=wt2, act="silu", residual=res))):
+        y_direct = np.asarray(ops.ap_linear_fused(
+            x, _direct_at(wt, w, kbits), a_bits=8, impl=impl,
+            out_dtype=jnp.float32, **kw_direct))
+        y_slice = np.asarray(ops.ap_linear_fused(
+            x, wt, a_bits=8, w_bits=kbits, impl=impl,
+            out_dtype=jnp.float32, **kw_slice))
+        np.testing.assert_allclose(y_slice, y_direct, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kbits", NESTED_KS)
+def test_nested_slice_unfused_linear_matches_direct(kbits):
+    """``ap_linear(..., w_bits=k)`` (the unfused path) agrees with the
+    direct k-bit quantization too -- nested slicing lives in ops, so
+    every GEMM entry point serves it."""
+    kdim = 67
+    x = jnp.asarray(RNG.standard_normal((3, 5, kdim)), jnp.float32)
+    w, wt = _nested_weight(19, kdim)
+    y_direct = np.asarray(ops.ap_linear(
+        x, _direct_at(wt, w, kbits), a_bits=8, impl="reference",
+        out_dtype=jnp.float32))
+    y_slice = np.asarray(ops.ap_linear(
+        x, wt, a_bits=8, w_bits=kbits, impl="reference",
+        out_dtype=jnp.float32))
+    np.testing.assert_allclose(y_slice, y_direct, rtol=1e-5, atol=1e-5)
+
+
+# grouped MoE: odd E/C/K/N and mixed partial fills, single + dual GEMM
+_ME, _MG, _MSEG, _MK, _MN = 2, 2, 3, 37, 19
+_MC = _MG * _MSEG
+
+
+def _moe_nested_weight(seed):
+    w = jnp.asarray(
+        np.random.default_rng(seed).standard_normal((_ME, _MN, _MK))
+        / np.sqrt(_MK), jnp.float32)
+    flat = ops.quantize_rows(w.reshape(-1, _MK), NEST_M, pad_bit=1,
+                             impl="reference", scale_search=True)
+    kw = flat.packed.shape[-1]
+    return w, dataclasses.replace(
+        flat,
+        packed=flat.packed.reshape(NEST_M, _ME, _MN, kw),
+        scale=flat.scale.reshape(_ME, _MN, 1),
+        width_scales=flat.width_scales.reshape(NEST_M, _ME, _MN, 1),
+        shape=(_ME, _MN, _MK), pack_axis=2)
+
+
+def _moe_direct_at(wt, w, kbits):
+    natural = wt.scale.reshape(-1, 1) * float(1 << (NEST_M - kbits))
+    direct = ops.quantize_rows(w.reshape(-1, _MK), kbits, pad_bit=1,
+                               scale=natural, impl="reference")
+    kw = direct.packed.shape[-1]
+    return dataclasses.replace(
+        direct,
+        packed=direct.packed.reshape(kbits, _ME, _MN, kw),
+        scale=wt.width_scales[kbits - 1],
+        width_scales=wt.width_scales[:kbits],
+        shape=(_ME, _MN, _MK), pack_axis=2)
+
+
+@pytest.mark.parametrize("kbits", [1, 3, 4, 8])
+@pytest.mark.parametrize("impl", NESTED_IMPLS)
+def test_nested_slice_moe_expert_matches_direct(kbits, impl):
+    """``ap_moe_expert_linear(..., w_bits=k)`` on a max-bit grouped
+    expert stack == the same op on direct k-bit expert weights, single
+    and dual (gate/up) GEMM, with mixed partial segment fills."""
+    x = jnp.asarray(RNG.standard_normal((_ME, _MC, _MK)), jnp.float32)
+    counts = jnp.asarray([[3, 1], [0, 2]], jnp.int32)
+    w, wt = _moe_nested_weight(seed=11)
+    w2, wt2 = _moe_nested_weight(seed=13)
+    for kw_direct, kw_slice in (
+            ({}, {}),
+            (dict(w2=_moe_direct_at(wt2, w2, kbits), act="silu"),
+             dict(w2=wt2, act="silu"))):
+        y_direct = np.asarray(ops.ap_moe_expert_linear(
+            x, _moe_direct_at(wt, w, kbits), counts=counts, a_bits=8,
+            impl=impl, out_dtype=jnp.float32, **kw_direct))
+        y_slice = np.asarray(ops.ap_moe_expert_linear(
+            x, wt, counts=counts, a_bits=8, w_bits=kbits, impl=impl,
+            out_dtype=jnp.float32, **kw_slice))
+        np.testing.assert_allclose(y_slice, y_direct, rtol=1e-5, atol=1e-5)
+
+
+def test_width_scales_contract():
+    """Structural contract of the per-width scales: top row == the base
+    scale exactly, and serving MORE planes never increases dequant
+    error (the any-precision quality ladder)."""
+    w, wt = _nested_weight(19, 67)
+    np.testing.assert_array_equal(np.asarray(wt.width_scales[NEST_M - 1]),
+                                  np.asarray(wt.scale))
+    from repro.core import bipolar
+    errs = []
+    for kbits in (2, 4, 8):
+        deq = np.asarray(bipolar.dequantize(bipolar.nested_slice(wt, kbits)))
+        errs.append(float(np.square(deq - np.asarray(w)).mean()))
+    assert errs[0] >= errs[1] >= errs[2], errs

@@ -149,6 +149,52 @@ def test_fused_linear_engine_token_identical_to_unfused():
     np.testing.assert_array_equal(logit[True], logit[False])
 
 
+@pytest.mark.parametrize("name,chunk", [
+    ("llama3-8b", None),          # pure attention, whole-prompt admission
+    ("llama3-8b", 4),             # chunked prefill: fused mixed steps
+    ("mixtral-8x7b", None),       # SWA window + MoE experts
+])
+def test_mixed_precision_batch_lane_token_identity(name, chunk):
+    """Nested-precision serving: a lane inside a mixed {8, 4, 2}-bit
+    paged batch emits tokens BIT-identical to the same request in a
+    homogeneous batch at its own precision.  Per-precision grouped
+    dispatch plus the precision-salted prefix cache mean batch
+    composition changes scheduling, never math -- the same contract
+    prefix sharing holds to, extended across widths.  The jit cache is
+    cleared across the flip so agreement cannot ride a stale compiled
+    program."""
+    from repro.models.config import QuantConfig
+    red = dict(n_layers=2) if name == "llama3-8b" \
+        else dict(n_layers=2, window=8)
+    cfg, params = _setup(name, **red)
+    qcfg = QuantConfig(w_bits=8, a_bits=8, kv_bits=8)
+    qparams = M.quantize_params(params, qcfg)
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(0, cfg.vocab, (5 + i,), dtype=np.int32)
+               for i in range(3)]
+
+    def run(precs):
+        jax.clear_caches()
+        eng = E.Engine(qparams, cfg, quant=qcfg, paged=True, n_slots=4,
+                       max_len=64, chunk_tokens=chunk,
+                       block_size=8 if cfg.window else 16)
+        reqs = [E.Request(prompt=p.copy(), max_new_tokens=5, precision=b)
+                for p, b in zip(prompts, precs)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        assert all(r.done and len(r.out) == 5 for r in reqs)
+        return [list(r.out) for r in reqs]
+
+    mixed = run([8, 4, 2])
+    homo8 = run([8, 8, 8])
+    assert mixed[0] == homo8[0], (mixed[0], homo8[0])
+    if name == "llama3-8b" and chunk is None:
+        # the bulk lanes hold too: every precision is its own closed lane
+        assert mixed[1] == run([4, 4, 4])[1]
+        assert mixed[2] == run([2, 2, 2])[2]
+
+
 def test_engine_matches_direct_greedy_decode():
     """Slot-inserted caches must be content-correct: a 2-slot engine's
     output for one request equals direct prefill+greedy decoding (this
